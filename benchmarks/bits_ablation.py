@@ -1,0 +1,55 @@
+"""Beyond-table ablation: quantization bit-width sweep (paper §6.2 supports
+intX for X in {2, 4, 8}; the paper fixes X=2 in §7.3 — this sweep shows why:
+volume scales with X while accuracy stays flat once LayerNorm + masked LP
+are in place, so the most aggressive width wins).
+
+Reports, per bit width: wire bytes per layer (hybrid plan), modelled comm
+time, and final eval accuracy on the SBM task.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DistConfig, DistributedTrainer, GCNConfig, prepare_distributed
+from repro.core.perf_model import FUGAKU_A64FX, comm_time
+from repro.graph import build_partitioned_graph, sbm_graph
+from repro.graph.generators import sbm_features
+from repro.quant import wire_bytes
+
+
+def run(epochs: int = 25, nparts: int = 4, feat_dim: int = 32) -> list:
+    g = sbm_graph(1200, 8, avg_degree=10, homophily=0.78, seed=21)
+    x, _ = sbm_features(g, feat_dim, noise=2.8, seed=22)
+    gn = g.mean_normalized()
+    pg = build_partitioned_graph(gn, nparts, strategy="hybrid", seed=0)
+    wd = prepare_distributed(gn, x, pg)
+    rows = []
+    hw = FUGAKU_A64FX
+    vol = pg.stats.per_pair_hybrid.astype(float)
+    for bits in (0, 8, 4, 2):
+        cfg = GCNConfig(model="sage", in_dim=feat_dim, hidden_dim=64,
+                        num_classes=8, num_layers=3, dropout=0.2,
+                        label_prop=True, norm="layer")
+        tr = DistributedTrainer(cfg, DistConfig(nparts=nparts, bits=bits,
+                                                lr=0.01),
+                                wd, mode="vmap", seed=0)
+        t0 = time.perf_counter()
+        tr.fit(epochs)
+        dt = (time.perf_counter() - t0) / epochs
+        acc = tr.evaluate()
+        if bits == 0:
+            wire = pg.stats.hybrid * feat_dim * 4
+            t_comm = comm_time(vol, feat_dim, hw)
+        else:
+            wire = wire_bytes(pg.stats.hybrid, feat_dim, bits)
+            t_comm = comm_time(vol, feat_dim, hw, bits=bits)
+        rows.append({
+            "name": f"bits_ablation/{'fp32' if bits == 0 else f'int{bits}'}",
+            "us_per_call": round(t_comm * 1e6, 2),
+            "derived": (f"eval_acc={acc:.4f},wire_bytes_per_layer={wire},"
+                        f"epoch_s={dt:.3f}"),
+        })
+    return rows

@@ -1,0 +1,44 @@
+"""Fig 7 / Eqn 8 analogue: quantized-communication speedup vs process count.
+
+Uses *measured* per-pair volumes from partitioning an R-MAT graph at
+increasing P, then the paper's closed-form speedup with the measured
+alpha/beta/gamma/delta. Expected shape: ~gamma speedup while
+throughput-bound, decaying toward 1 as latency dominates, never < 1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.perf_model import FUGAKU_A64FX, delta_ratio, speedup_model
+from repro.graph import build_partitioned_graph, rmat_graph
+
+
+def run(scale: int = 13, bits: int = 2, feat_dim: int = 256) -> list:
+    hw = FUGAKU_A64FX
+    gamma = 32 / bits
+    rows = []
+    g = rmat_graph(scale, edge_factor=8, seed=2)
+    measured = {}
+    for nparts in (4, 8, 16, 32):
+        pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
+        v = pg.stats.per_pair_hybrid
+        nz = v[v > 0]
+        measured[nparts] = float(nz.mean()) if len(nz) else 0.0
+    # Extrapolate mean pair volume ~ c / P^k to supercomputer scales.
+    ps = np.array(sorted(measured))
+    vs = np.array([measured[p] for p in ps])
+    k, logc = np.polyfit(np.log(ps), np.log(np.maximum(vs, 1e-9)), 1)
+    for p in (4, 16, 64, 256, 1024, 4096, 8192):
+        vol = float(np.exp(logc) * p ** k)
+        delta = delta_ratio(vol, feat_dim, bits, hw)
+        alpha = max(vol * feat_dim / ((vol / 4) * 2), 1.0)
+        s = speedup_model(alpha=alpha, beta=hw.beta, gamma=gamma, delta=delta)
+        regime = "throughput" if delta < 1 else "latency"
+        src = "measured" if p in measured else "extrapolated"
+        rows.append({
+            "name": f"speedup_fig7/P={p}",
+            "us_per_call": round(delta, 4),
+            "derived": f"speedup={s:.2f}x,regime={regime},{src}",
+        })
+    return rows

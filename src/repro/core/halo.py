@@ -1,0 +1,157 @@
+"""Halo exchange: the communication stage of distributed full-batch GCN.
+
+One exchange per GCN layer (Fig 2 steps 4–6):
+
+  1. assemble the send buffer — raw covered-source rows (post) gathered +
+     pre-aggregated partials (pre) scattered, per destination chunk;
+  2. optionally LayerNorm'd features are stochastically quantized (int2 by
+     default, §7.3) — payload + fp32 (zero, scale) per 4-row group;
+  3. ``jax.lax.all_to_all`` (the MPI_Alltoallv analogue; chunks are padded
+     to the max pair volume because XLA requires static shapes);
+  4. dequantize and scatter-add received rows into the local aggregation.
+
+Works under ``shard_map`` (real devices) and ``jax.vmap`` (virtual workers
+on one device — numerically identical, used by tests), since both implement
+the named-axis collective semantics.
+
+Backward pass: the VJP of the exchange is the reverse exchange; with
+quantization enabled the cotangents are quantized too (the paper's Lemma 1
+covers this — stochastic rounding keeps the gradient unbiased).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.stochastic import QuantParams, dequantize, quantize
+
+
+class DeviceHaloPlan(NamedTuple):
+    """Per-worker slices of graph.remote.HaloPlan, as device arrays.
+
+    Leading axis of each array in the *stacked* plan is the worker axis;
+    inside shard_map/vmap each worker sees its own slice (no leading axis).
+    """
+
+    send_gather_idx: jax.Array   # [P*R] int32
+    send_gather_mask: jax.Array  # [P*R] bool
+    pre_src: jax.Array           # [pre_nnz] int32
+    pre_slot: jax.Array          # [pre_nnz] int32
+    pre_weight: jax.Array        # [pre_nnz] f32
+    recv_row: jax.Array          # [recv_nnz] int32
+    recv_dst: jax.Array          # [recv_nnz] int32
+    recv_weight: jax.Array       # [recv_nnz] f32
+
+
+def stack_halo_plan(hp) -> DeviceHaloPlan:
+    """graph.remote.HaloPlan (host numpy, [P, ...]) -> stacked device plan."""
+    return DeviceHaloPlan(
+        send_gather_idx=jnp.asarray(hp.send_gather_idx, jnp.int32),
+        send_gather_mask=jnp.asarray(hp.send_gather_mask),
+        pre_src=jnp.asarray(hp.pre_src, jnp.int32),
+        pre_slot=jnp.asarray(hp.pre_slot, jnp.int32),
+        pre_weight=jnp.asarray(hp.pre_weight),
+        recv_row=jnp.asarray(hp.recv_row, jnp.int32),
+        recv_dst=jnp.asarray(hp.recv_dst, jnp.int32),
+        recv_weight=jnp.asarray(hp.recv_weight),
+    )
+
+
+def assemble_send(h: jax.Array, plan: DeviceHaloPlan) -> jax.Array:
+    """Build the [P*R, F] wire buffer: post raws + pre partials (Fig 2 step 4)."""
+    raw = jnp.where(plan.send_gather_mask[:, None], h[plan.send_gather_idx], 0.0)
+    send = raw.at[plan.pre_slot].add(plan.pre_weight[:, None] * h[plan.pre_src])
+    return send
+
+
+def scatter_recv(acc: jax.Array, recv: jax.Array, plan: DeviceHaloPlan) -> jax.Array:
+    """Post-aggregate received rows into the local accumulator (Fig 2 step 6)."""
+    return acc.at[plan.recv_dst].add(plan.recv_weight[:, None] * recv[plan.recv_row])
+
+
+def _a2a(x: jax.Array, axis_name: str, nparts: int) -> jax.Array:
+    """Tiled all_to_all over the worker axis on a [P*R, F] buffer."""
+    return jax.lax.all_to_all(
+        x.reshape(nparts, -1, x.shape[-1]), axis_name,
+        split_axis=0, concat_axis=0, tiled=False,
+    ).reshape(x.shape)
+
+
+def halo_exchange_fp32(
+    h: jax.Array, plan: DeviceHaloPlan, axis_name: str, nparts: int
+) -> jax.Array:
+    """FP32 exchange: returns the received [P*R, F] buffer."""
+    return _a2a(assemble_send(h, plan), axis_name, nparts)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _quantized_a2a(send, key, axis_name, nparts, bits):
+    q, params = quantize(send, bits, key)
+    qr = _a2a(q.astype(jnp.int32), axis_name, nparts)
+    # fp32 (zero, scale) ride along — the paper's "params" wire term (Eqn 5).
+    zr = _a2a(params.zero[:, None], axis_name, nparts)[:, 0]
+    sr = _a2a(params.scale[:, None], axis_name, nparts)[:, 0]
+    return dequantize(qr, QuantParams(zr, sr))
+
+
+def _quantized_a2a_fwd(send, key, axis_name, nparts, bits):
+    out = _quantized_a2a(send, key, axis_name, nparts, bits)
+    return out, key
+
+
+def _quantized_a2a_bwd(axis_name, nparts, bits, key, g):
+    # Reverse exchange of (quantized) cotangents; unbiased per Lemma 1.
+    gkey = jax.random.fold_in(key, 0x5bd1)
+    gq = _quantized_a2a(g, gkey, axis_name, nparts, bits)
+    return gq, None
+
+
+_quantized_a2a.defvjp(_quantized_a2a_fwd, _quantized_a2a_bwd)
+
+
+def halo_exchange(
+    h: jax.Array,
+    plan: DeviceHaloPlan,
+    axis_name: str,
+    nparts: int,
+    *,
+    bits: int = 0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full exchange: assemble -> (quantize) -> all_to_all -> (dequantize).
+
+    bits=0 means fp32 wire format (the paper's baseline); bits in {2,4,8}
+    enables the communication-aware quantization scheme.
+    """
+    send = assemble_send(h, plan)
+    if bits == 0:
+        return _a2a(send, axis_name, nparts)
+    if key is None:
+        raise ValueError("quantized halo exchange needs a PRNG key")
+    rows = send.shape[0]
+    # Quant row groups (4 rows share zero/scale) must not straddle the
+    # per-destination chunks — pad rows_per_pair to a multiple of 4.
+    if (rows // nparts) % 4:
+        raise ValueError(
+            f"rows_per_pair {rows // nparts} must be a multiple of the quant row group (4)"
+        )
+    return _quantized_a2a(send, key, axis_name, nparts, bits)
+
+
+def aggregate_with_halo(
+    h: jax.Array,
+    local_agg: jax.Array,
+    plan: DeviceHaloPlan,
+    axis_name: str,
+    nparts: int,
+    *,
+    bits: int = 0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """local aggregation + remote pre/post contributions -> full AGGREGATE."""
+    recv = halo_exchange(h, plan, axis_name, nparts, bits=bits, key=key)
+    return scatter_recv(local_agg, recv, plan)

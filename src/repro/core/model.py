@@ -1,0 +1,113 @@
+"""GCN model: config, parameter init, forward pass (Fig 2 flow).
+
+The forward is parameterized by ``agg_fn(layer, h) -> z`` so the identical
+model runs on a single device (full-graph ELL aggregation) or distributed
+(local aggregation + pre/post halo exchange). Quantization and masked label
+propagation (§6.1) are part of the model flow:
+
+  (1) masked LP: random subset of train labels embedded into the features,
+  (2) LayerNorm before every GCN layer (outlier removal for quantization),
+  (3) aggregation (+ quantized communication inside ``agg_fn``),
+  (4) UPDATE (linear transform / MLP), repeat.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+
+
+@dataclass(frozen=True)
+class GCNConfig:
+    model: str = "sage"          # gcn | sage | gin | gat
+    in_dim: int = 128
+    hidden_dim: int = 256        # paper Table 2: 256 (128 for UK-2007-05)
+    num_classes: int = 40
+    num_layers: int = 3          # paper: three-layer GraphSAGE
+    dropout: float = 0.5
+    norm: str = "layer"          # LayerNorm before each layer (Table 2)
+    label_prop: bool = True      # masked label propagation (§6.1)
+    lp_rate: float = 0.5         # fraction of train labels propagated
+    quant_bits: int = 0          # 0 = fp32 comm; 2 = paper's Int2 scheme
+    gat_heads: int = 4
+
+    def dims(self) -> List[int]:
+        return [self.in_dim] + [self.hidden_dim] * (self.num_layers - 1) + [self.num_classes]
+
+
+def init_params(key: jax.Array, cfg: GCNConfig) -> Dict:
+    ks = jax.random.split(key, cfg.num_layers + 1)
+    dims = cfg.dims()
+    params: Dict = {
+        "layers": [
+            L.init_layer(ks[i], cfg.model, dims[i], dims[i + 1], cfg.gat_heads)
+            for i in range(cfg.num_layers)
+        ]
+    }
+    if cfg.label_prop:
+        params["lp_embed"] = (
+            jax.random.normal(ks[-1], (cfg.num_classes, cfg.in_dim)) * 0.02
+        )
+    return params
+
+
+def lp_masks(
+    key: jax.Array, train_mask: jax.Array, rate: float
+) -> tuple[jax.Array, jax.Array]:
+    """Split train nodes into (propagate labels, compute loss) — §2.5.
+
+    Propagated labels are *excluded* from the loss to avoid label leakage.
+    """
+    sel = jax.random.bernoulli(key, rate, train_mask.shape)
+    prop_mask = train_mask & sel
+    loss_mask = train_mask & ~sel
+    return prop_mask, loss_mask
+
+
+def forward(
+    params: Dict,
+    cfg: GCNConfig,
+    x: jax.Array,                    # [N, in_dim] node features
+    labels: jax.Array,               # [N] int labels
+    prop_mask: jax.Array,            # [N] bool: labels embedded into features
+    agg_fn: Callable[[int, jax.Array], jax.Array],
+    *,
+    train: bool = False,
+    dropout_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    h = x
+    if cfg.label_prop:
+        emb = params["lp_embed"][jnp.clip(labels, 0, cfg.num_classes - 1)]
+        h = h + jnp.where(prop_mask[:, None], emb, 0.0)
+    for l, p in enumerate(params["layers"]):
+        if cfg.norm == "layer":
+            h = L.layer_norm(h, p["ln_scale"], p["ln_bias"])
+        if train and cfg.dropout > 0:
+            dropout_key, sub = jax.random.split(dropout_key)
+            keep = jax.random.bernoulli(sub, 1.0 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1.0 - cfg.dropout), 0.0)
+        if cfg.model == "gat":
+            h = agg_fn(l, h)  # GAT fuses aggregate+update (attention needs both ends)
+        else:
+            z = agg_fn(l, h)
+            h = L.apply_update(cfg.model, p, h, z)
+        if l < cfg.num_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_and_metrics(
+    logits: jax.Array, labels: jax.Array, loss_mask: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked softmax cross entropy. Returns (loss_sum, correct_sum, count)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    m = loss_mask.astype(jnp.float32)
+    loss_sum = jnp.sum(nll * m)
+    correct = jnp.sum((jnp.argmax(logits, -1) == labels).astype(jnp.float32) * m)
+    return loss_sum, correct, jnp.sum(m)

@@ -1,0 +1,119 @@
+"""Communication performance model (paper §5.4 Eqn 2, §6.2 Eqns 3–8).
+
+Drives the scaling benchmarks (Figs 7, 9, 10 analogues): given *measured*
+per-pair communication volumes from the partitioner/MVC pipeline and
+hardware constants, predict epoch communication time with and without the
+quantization scheme, and the speedup curve vs process count.
+
+Hardware presets: the paper's two machines plus the TPU-v5e target this
+codebase compiles for (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    bw_comm: float    # bytes/s per worker link
+    latency: float    # seconds per message
+    th_cal: float     # bytes/s effective local compute streaming throughput
+
+    @property
+    def beta(self) -> float:
+        """β = TH_cal / BW_comm (paper: ~O(10^2))."""
+        return self.th_cal / self.bw_comm
+
+
+ABCI_XEON = HardwareSpec("abci-xeon6148", bw_comm=12.5e9, latency=2e-6, th_cal=200e9)
+FUGAKU_A64FX = HardwareSpec("fugaku-a64fx", bw_comm=6.8e9, latency=1e-6, th_cal=1024e9)
+TPU_V5E = HardwareSpec("tpu-v5e-ici", bw_comm=50e9, latency=1e-6, th_cal=819e9)
+
+BIT_FP32 = 32
+
+
+def comm_time_matrix(volume_rows: np.ndarray, feat_dim: int, hw: HardwareSpec,
+                     bits: int = BIT_FP32) -> np.ndarray:
+    """T_comm^{i,j} (Eqn 2 upper): per-pair transfer time + latency."""
+    bytes_ij = volume_rows * feat_dim * bits / 8.0
+    t = bytes_ij / hw.bw_comm
+    t = t + (volume_rows > 0) * hw.latency
+    return t
+
+
+def comm_time(volume_rows: np.ndarray, feat_dim: int, hw: HardwareSpec,
+              bits: int = BIT_FP32) -> float:
+    """T_comm (Eqn 2 lower): bottleneck worker = max_i sum_j T^{i,j}."""
+    t = comm_time_matrix(volume_rows, feat_dim, hw, bits)
+    return float(t.sum(axis=1).max()) if t.size else 0.0
+
+
+def quant_comm_time(volume_rows: np.ndarray, feat_dim: int, hw: HardwareSpec,
+                    bits: int, subgraph_rows: np.ndarray,
+                    row_group: int = 4) -> float:
+    """T_quant_comm (Eqn 6): pre-quant + quant + wire + params + dequant."""
+    P = volume_rows.shape[0]
+    # Eqn 3: masked LP + LayerNorm over the local subgraph (no extra comm).
+    t_pre = subgraph_rows * feat_dim * 4.0 / hw.th_cal
+    # Eqn 4: quant reads fp32 + writes intX; dequant symmetric.
+    bytes_rw = volume_rows * feat_dim * (BIT_FP32 + bits) / 8.0
+    t_quant = bytes_rw / hw.th_cal
+    t_dequant = t_quant.T
+    # Eqn 5: quantized payload + fp32 (zero, scale) per row group.
+    payload = volume_rows * feat_dim * bits / 8.0
+    params = np.ceil(volume_rows / row_group) * 2 * 4.0
+    t_wire = (payload + params) / hw.bw_comm + (volume_rows > 0) * hw.latency
+    per_worker = t_pre + (t_quant + t_wire + t_dequant).sum(axis=1)
+    return float(per_worker.max()) if per_worker.size else 0.0
+
+
+def speedup_model(alpha: float, beta: float, gamma: float, delta: float) -> float:
+    """Eqn 8: closed-form speedup of quantized over fp32 communication."""
+    num = alpha * beta * (gamma + delta)
+    den = (1 + delta) * alpha * beta + 2 * alpha * (1 + gamma) + beta * gamma
+    return num / den
+
+
+def delta_ratio(volume_rows: float, feat_dim: int, bits: int, hw: HardwareSpec) -> float:
+    """δ = L_comm / (per-pair quantized transfer time); →∞ when latency-bound."""
+    transfer = volume_rows * feat_dim * bits / 8.0 / hw.bw_comm
+    return hw.latency / max(transfer, 1e-30)
+
+
+def epoch_time_model(
+    volume_rows: np.ndarray,     # [P, P] feature rows on the wire
+    local_nnz: np.ndarray,       # [P] local aggregation edges per worker
+    owned_rows: np.ndarray,      # [P] owned nodes per worker
+    feat_dim: int,
+    hidden_dim: int,
+    num_layers: int,
+    hw: HardwareSpec,
+    bits: int = 0,
+) -> dict:
+    """Full-epoch time split into the Fig-12 components (per GCN layer x L).
+
+    Aggregation: nnz * F reads; NN op: rows * F * H MACs (treated as
+    streaming-bound on CPUs, the paper's regime); comm via Eqns 2/6.
+    """
+    f = max(feat_dim, hidden_dim)
+    t_aggr = float((local_nnz * f * 4.0 / hw.th_cal).max()) * num_layers
+    flops = owned_rows * f * hidden_dim * 2.0
+    t_nn = float((flops / (hw.th_cal * 4.0)).max()) * num_layers
+    if bits == 0:
+        t_comm = comm_time(volume_rows, f, hw) * num_layers
+        t_quant = 0.0
+    else:
+        full = quant_comm_time(volume_rows, f, hw, bits, owned_rows) * num_layers
+        wire_only = comm_time(volume_rows, f, hw, bits) * num_layers
+        t_comm = wire_only
+        t_quant = max(full - wire_only, 0.0)
+    # Sync: load imbalance — difference between max and mean compute.
+    per_worker_compute = local_nnz * f * 4.0 / hw.th_cal
+    t_sync = float(per_worker_compute.max() - per_worker_compute.mean()) * num_layers
+    total = t_aggr + t_nn + t_comm + t_quant + t_sync
+    return {"aggr": t_aggr, "nn": t_nn, "comm": t_comm, "quant": t_quant,
+            "sync": t_sync, "total": total}

@@ -1,0 +1,406 @@
+"""Full-batch GCN training — single-device and distributed (Fig 2).
+
+The distributed step runs per-worker code written against a named axis
+(``psum`` / ``all_to_all``) and executes it two ways:
+
+* ``mode="vmap"``   — P virtual workers on one device (numerically identical
+  collectives via vmap's named-axis support; used by tests and the CPU
+  container),
+* ``mode="shard_map"`` — P real devices on a mesh (production path; the
+  dry-run harness lowers this on the 512-device host mesh).
+
+One training step per epoch (full batch): masked-LP feature assembly →
+per-layer [LayerNorm → dropout → local aggregation ∥ halo exchange
+(optionally Int2-quantized) → UPDATE] → masked CE loss → psum(grads) →
+AdamW. Synchronous, fresh boundary nodes every epoch (Table 1).
+
+The DistGNN-style delayed-communication baseline (cd-N) reuses stale halo
+buffers for N-1 epochs — the paper's ABCI comparison target.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as M
+from repro.core.halo import (
+    DeviceHaloPlan,
+    aggregate_with_halo,
+    halo_exchange,
+    scatter_recv,
+    stack_halo_plan,
+)
+from repro.core.layers import gat_aggregate
+from repro.graph.remote import PartitionedGraph, build_halo_plan
+from repro.graph.structure import Graph, ell_from_csr
+from repro.kernels import aggregate as kernel_aggregate
+from repro.kernels.ref import seg_aggregate_ref
+from repro.optim import adamw_init, adamw_update
+
+
+# --------------------------------------------------------------------------
+# Single-device path (full-graph ELL aggregation; paper Fig 8 operator level)
+# --------------------------------------------------------------------------
+
+
+class SingleGraphData(NamedTuple):
+    x: jax.Array
+    labels: jax.Array
+    train_mask: jax.Array
+    eval_mask: jax.Array
+    ell_idx: jax.Array
+    ell_w: jax.Array
+    ell_valid: jax.Array
+
+
+def prepare_single(g: Graph, x: np.ndarray, eval_mask: Optional[np.ndarray] = None,
+                   norm: str = "mean") -> SingleGraphData:
+    gn = g.gcn_normalized() if norm == "gcn" else g.mean_normalized()
+    idx, w, valid = ell_from_csr(gn.csr_by_dst())
+    train = g.train_mask if g.train_mask is not None else np.ones(g.num_nodes, bool)
+    if eval_mask is None:
+        eval_mask = ~train
+    return SingleGraphData(
+        x=jnp.asarray(x),
+        labels=jnp.asarray(g.labels, jnp.int32),
+        train_mask=jnp.asarray(train),
+        eval_mask=jnp.asarray(eval_mask),
+        ell_idx=jnp.asarray(idx, jnp.int32),
+        ell_w=jnp.asarray(w),
+        ell_valid=jnp.asarray(valid),
+    )
+
+
+def make_single_agg_fn(cfg: M.GCNConfig, data: SingleGraphData, params_getter,
+                       use_kernel: bool = False):
+    def agg_fn(l: int, h: jax.Array) -> jax.Array:
+        if cfg.model == "gat":
+            p = params_getter()["layers"][l]
+            return gat_aggregate(p, h, data.ell_idx, data.ell_valid, cfg.gat_heads)
+        if use_kernel:
+            return kernel_aggregate(h, data.ell_idx, data.ell_w)
+        return seg_aggregate_ref(h, data.ell_idx, data.ell_w)
+    return agg_fn
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def single_train_step(params, opt_state, cfg: M.GCNConfig, data: SingleGraphData,
+                      key: jax.Array, lr: float = 0.01):
+    kp, kd = jax.random.split(key)
+    prop_mask, loss_mask = M.lp_masks(kp, data.train_mask, cfg.lp_rate)
+    if not cfg.label_prop:
+        prop_mask = jnp.zeros_like(prop_mask)
+        loss_mask = data.train_mask
+
+    def loss_fn(p):
+        agg = make_single_agg_fn(cfg, data, lambda: p)
+        logits = M.forward(p, cfg, data.x, data.labels, prop_mask, agg,
+                           train=True, dropout_key=kd)
+        ls, correct, cnt = M.loss_and_metrics(logits, data.labels, loss_mask)
+        return ls / jnp.maximum(cnt, 1.0), (correct, cnt)
+
+    (loss, (correct, cnt)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt_state = adamw_update(grads, opt_state, params, lr)
+    return params, opt_state, {"loss": loss, "train_acc": correct / jnp.maximum(cnt, 1.0)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def single_eval(params, cfg: M.GCNConfig, data: SingleGraphData):
+    # Inference-time LP: propagate all train labels, score on eval nodes.
+    prop = data.train_mask if cfg.label_prop else jnp.zeros_like(data.train_mask)
+    agg = make_single_agg_fn(cfg, data, lambda: params)
+    logits = M.forward(params, cfg, data.x, data.labels, prop, agg, train=False)
+    _, correct, cnt = M.loss_and_metrics(logits, data.labels, data.eval_mask)
+    return correct / jnp.maximum(cnt, 1.0)
+
+
+def train_gcn_single(g: Graph, x: np.ndarray, cfg: M.GCNConfig, epochs: int,
+                     lr: float = 0.01, seed: int = 0, log_every: int = 0):
+    data = prepare_single(g, x)
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw_init(params)
+    history = []
+    for e in range(epochs):
+        params, opt_state, m = single_train_step(
+            params, opt_state, cfg, data, jax.random.PRNGKey(seed * 100003 + e), lr)
+        if log_every and (e % log_every == 0 or e == epochs - 1):
+            acc = single_eval(params, cfg, data)
+            history.append({"epoch": e, "loss": float(m["loss"]), "eval_acc": float(acc)})
+    return params, history
+
+
+# --------------------------------------------------------------------------
+# Distributed path (shard_map / vmap over the worker axis)
+# --------------------------------------------------------------------------
+
+
+class WorkerData(NamedTuple):
+    """Per-worker arrays; in the stacked form every field has leading dim P."""
+
+    x: jax.Array           # [M, F] padded owned features
+    labels: jax.Array      # [M]
+    train_mask: jax.Array  # [M] (False on padding)
+    eval_mask: jax.Array   # [M]
+    owned_mask: jax.Array  # [M]
+    coo_src: jax.Array     # [nnz] local COO aggregation graph
+    coo_dst: jax.Array     # [nnz]
+    coo_w: jax.Array       # [nnz] (0 on padding)
+    plan: DeviceHaloPlan
+
+
+@dataclass(frozen=True)
+class DistConfig:
+    nparts: int
+    axis_name: str = "workers"
+    bits: int = 0            # wire format: 0=fp32, 2=Int2 (paper), 4, 8
+    cd: int = 1              # delayed-comm period (DistGNN baseline; 1 = sync)
+    lr: float = 0.01
+
+
+def prepare_distributed(
+    g: Graph,
+    x: np.ndarray,
+    pg: PartitionedGraph,
+    eval_mask: Optional[np.ndarray] = None,
+    norm_applied: bool = True,
+) -> WorkerData:
+    """Pad per-partition arrays to common shapes and stack on the worker axis.
+
+    ``g`` must already carry edge weights (use gcn_normalized/mean_normalized
+    *before* partitioning so pre-aggregation applies source-side weights).
+    """
+    P = pg.nparts
+    M_ = pg.max_owned
+    F = x.shape[1]
+    train = g.train_mask if g.train_mask is not None else np.ones(g.num_nodes, bool)
+    if eval_mask is None:
+        eval_mask = ~train
+    labels = g.labels if g.labels is not None else np.zeros(g.num_nodes, np.int32)
+
+    xs = np.zeros((P, M_, F), np.float32)
+    ls = np.zeros((P, M_), np.int32)
+    tm = np.zeros((P, M_), bool)
+    em = np.zeros((P, M_), bool)
+    om = np.zeros((P, M_), bool)
+    nnz_max = max(max(c.nnz for c in pg.local_csr), 1)
+    cs = np.zeros((P, nnz_max), np.int64)
+    cd_ = np.zeros((P, nnz_max), np.int64)
+    cw = np.zeros((P, nnz_max), np.float32)
+    for p in range(P):
+        o = pg.owned[p]
+        n = len(o)
+        xs[p, :n] = x[o]
+        ls[p, :n] = labels[o]
+        tm[p, :n] = train[o]
+        em[p, :n] = eval_mask[o]
+        om[p, :n] = True
+        c = pg.local_csr[p]
+        dst = np.repeat(np.arange(c.num_rows), np.diff(c.indptr))
+        cs[p, :c.nnz] = c.indices
+        cd_[p, :c.nnz] = dst
+        cw[p, :c.nnz] = c.weights
+
+    # Pad wire rows per pair to a multiple of the quant row group (4).
+    R = pg.stats.padded_rows_per_pair
+    R = max(4, (R + 3) // 4 * 4)
+    hp = build_halo_plan(pg, rows_per_pair=R)
+    return WorkerData(
+        x=jnp.asarray(xs), labels=jnp.asarray(ls), train_mask=jnp.asarray(tm),
+        eval_mask=jnp.asarray(em), owned_mask=jnp.asarray(om),
+        coo_src=jnp.asarray(cs, jnp.int32), coo_dst=jnp.asarray(cd_, jnp.int32),
+        coo_w=jnp.asarray(cw),
+        plan=stack_halo_plan(hp),
+    )
+
+
+def _local_aggregate(h: jax.Array, wd: WorkerData) -> jax.Array:
+    """Local (intra-partition) aggregation: COO scatter-add segment sum."""
+    vals = wd.coo_w[:, None] * h[wd.coo_src]
+    return jnp.zeros_like(h).at[wd.coo_dst].add(vals)
+
+
+def _dist_forward(params, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
+                  prop_mask, key, train: bool,
+                  halo_cache: Optional[List[jax.Array]] = None,
+                  refresh=None):
+    """Per-worker forward. Returns (logits, new_halo_cache)."""
+    new_cache: List[jax.Array] = []
+
+    def agg_fn_factory(dropout_key):
+        def agg_fn(l: int, h: jax.Array) -> jax.Array:
+            local = _local_aggregate(h, wd)
+            kq = jax.random.fold_in(key, 7919 + l) if key is not None else None
+            if halo_cache is None:
+                agg = aggregate_with_halo(h, local, wd.plan, dc.axis_name,
+                                          dc.nparts, bits=dc.bits, key=kq)
+                new_cache.append(jnp.zeros((0,)))
+            else:
+                # DistGNN-style delayed comm: refresh the halo every cd epochs,
+                # otherwise reuse the stale buffer (stop-gradient, async-like).
+                fresh = halo_exchange(h, wd.plan, dc.axis_name, dc.nparts,
+                                      bits=dc.bits, key=kq)
+                stale = jax.lax.stop_gradient(halo_cache[l])
+                recv = jnp.where(refresh, fresh, stale)
+                new_cache.append(jax.lax.stop_gradient(recv))
+                agg = scatter_recv(local, recv, wd.plan)
+            return agg
+        return agg_fn
+
+    kd = jax.random.fold_in(key, 104729) if key is not None else jax.random.PRNGKey(0)
+    logits = M.forward(params, cfg, wd.x, wd.labels, prop_mask,
+                       agg_fn_factory(kd), train=train, dropout_key=kd)
+    return logits, new_cache
+
+
+def make_dist_train_step(cfg: M.GCNConfig, dc: DistConfig, use_cache: bool = False):
+    """Returns worker_fn(params, wd, key[, cache, refresh]) -> (grads, metrics[, cache])."""
+
+    def worker_fn(params, wd: WorkerData, key, cache=None, refresh=None):
+        widx = jax.lax.axis_index(dc.axis_name)
+        kw = jax.random.fold_in(key, widx)
+        kp = jax.random.fold_in(kw, 1)
+        prop_mask, loss_mask = M.lp_masks(kp, wd.train_mask, cfg.lp_rate)
+        if not cfg.label_prop:
+            prop_mask = jnp.zeros_like(prop_mask)
+            loss_mask = wd.train_mask
+
+        cache_out: List[jax.Array] = []
+
+        def loss_fn(p):
+            logits, nc = _dist_forward(p, cfg, dc, wd, prop_mask, kw, True,
+                                       halo_cache=cache, refresh=refresh)
+            cache_out.extend(nc)
+            ls, correct, cnt = M.loss_and_metrics(logits, wd.labels, loss_mask)
+            # Global mean loss: psum both numerator and denominator.
+            gls = jax.lax.psum(ls, dc.axis_name)
+            gcnt = jax.lax.psum(cnt, dc.axis_name)
+            return gls / jnp.maximum(gcnt, 1.0), (correct, cnt)
+
+        (loss, (correct, cnt)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads = jax.lax.psum(grads, dc.axis_name)
+        gcorrect = jax.lax.psum(correct, dc.axis_name)
+        gcnt = jax.lax.psum(cnt, dc.axis_name)
+        metrics = {"loss": loss, "train_acc": gcorrect / jnp.maximum(gcnt, 1.0)}
+        if use_cache:
+            return grads, metrics, cache_out
+        return grads, metrics
+
+    return worker_fn
+
+
+def make_dist_eval(cfg: M.GCNConfig, dc: DistConfig):
+    def worker_fn(params, wd: WorkerData):
+        prop = wd.train_mask if cfg.label_prop else jnp.zeros_like(wd.train_mask)
+        # Eval always uses fp32 fresh halo (accuracy measurement).
+        dc_eval = DistConfig(nparts=dc.nparts, axis_name=dc.axis_name, bits=0)
+        logits, _ = _dist_forward(params, cfg, dc_eval, wd, prop,
+                                  jax.random.PRNGKey(0), False)
+        _, correct, cnt = M.loss_and_metrics(logits, wd.labels, wd.eval_mask)
+        return (jax.lax.psum(correct, dc.axis_name),
+                jax.lax.psum(cnt, dc.axis_name))
+    return worker_fn
+
+
+class DistributedTrainer:
+    """Drives the per-worker step via vmap (virtual) or shard_map (real mesh)."""
+
+    def __init__(self, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
+                 mode: str = "vmap", mesh=None, seed: int = 0):
+        self.cfg, self.dc, self.wd, self.mode = cfg, dc, wd, mode
+        self.params = M.init_params(jax.random.PRNGKey(seed), cfg)
+        self.opt_state = adamw_init(self.params)
+        self.epoch = 0
+        self.use_cache = dc.cd > 1
+        self._cache = None
+        worker_step = make_dist_train_step(cfg, dc, use_cache=self.use_cache)
+        worker_eval = make_dist_eval(cfg, dc)
+
+        if mode == "vmap":
+            if self.use_cache:
+                self._step = jax.jit(jax.vmap(
+                    worker_step, axis_name=dc.axis_name,
+                    in_axes=(None, 0, None, 0, None)))
+            else:
+                self._step = jax.jit(jax.vmap(
+                    worker_step, axis_name=dc.axis_name, in_axes=(None, 0, None)))
+            self._eval = jax.jit(jax.vmap(
+                worker_eval, axis_name=dc.axis_name, in_axes=(None, 0)))
+        elif mode == "shard_map":
+            from jax.sharding import PartitionSpec as P
+            from jax.experimental.shard_map import shard_map
+            if mesh is None:
+                raise ValueError("shard_map mode needs a mesh")
+            self.mesh = mesh
+            spec_data = jax.tree_util.tree_map(lambda _: P(dc.axis_name), wd)
+            if self.use_cache:
+                raise NotImplementedError("cd>1 currently runs in vmap mode")
+
+            def _squeeze(tree):
+                # shard_map keeps the sharded axis as size-1 (vmap strips it)
+                return jax.tree_util.tree_map(lambda x: x[0], tree)
+
+            def step_sm(params, wdata, key):
+                return worker_step(params, _squeeze(wdata), key)
+
+            def eval_sm(params, wdata):
+                return worker_eval(params, _squeeze(wdata))
+
+            self._step = jax.jit(shard_map(
+                step_sm, mesh=mesh,
+                in_specs=(P(), spec_data, P()),
+                out_specs=(P(), P()), check_rep=False))
+            self._eval = jax.jit(shard_map(
+                eval_sm, mesh=mesh,
+                in_specs=(P(), spec_data), out_specs=(P(), P()), check_rep=False))
+        else:
+            raise ValueError(mode)
+
+    def _unreplicate(self, tree):
+        if self.mode == "vmap":
+            return jax.tree_util.tree_map(lambda x: x[0], tree)
+        return tree
+
+    def train_epoch(self) -> Dict[str, float]:
+        key = jax.random.PRNGKey(1000003 + self.epoch)
+        if self.use_cache:
+            if self._cache is None:
+                # Epoch 0 always refreshes; initialize zero cache lazily.
+                # Layer l exchanges features of width dims()[l] (in_dim for
+                # the first layer, hidden_dim after).
+                dims = self.cfg.dims()
+                P_, rows = self.wd.plan.send_gather_idx.shape[:2]
+                self._cache = [jnp.zeros((P_, rows, dims[l]))
+                               for l in range(self.cfg.num_layers)]
+            refresh = jnp.asarray(self.epoch % self.dc.cd == 0)
+            grads, metrics, cache = self._step(self.params, self.wd, key,
+                                               self._cache, refresh)
+            self._cache = cache
+        else:
+            grads, metrics = self._step(self.params, self.wd, key)
+        grads = self._unreplicate(grads)
+        metrics = self._unreplicate(metrics)
+        self.params, self.opt_state = adamw_update(
+            grads, self.opt_state, self.params, self.dc.lr)
+        self.epoch += 1
+        return {k: float(v) for k, v in metrics.items()}
+
+    def evaluate(self) -> float:
+        correct, cnt = self._eval(self.params, self.wd)
+        correct, cnt = self._unreplicate((correct, cnt))
+        return float(correct) / max(float(cnt), 1.0)
+
+    def fit(self, epochs: int, log_every: int = 0) -> List[Dict]:
+        history = []
+        for _ in range(epochs):
+            m = self.train_epoch()
+            if log_every and (self.epoch % log_every == 0 or self.epoch == epochs):
+                m["eval_acc"] = self.evaluate()
+                m["epoch"] = self.epoch
+                history.append(m)
+        return history

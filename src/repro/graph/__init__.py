@@ -1,0 +1,28 @@
+from repro.graph.structure import CSR, Graph, coo_to_csr
+from repro.graph.generators import rmat_graph, sbm_graph, erdos_graph
+from repro.graph.partition import partition_graph, cut_edges, partition_stats
+from repro.graph.mvc import hopcroft_karp, min_vertex_cover_bipartite
+from repro.graph.remote import (
+    CommStats,
+    HaloPlan,
+    PartitionedGraph,
+    build_partitioned_graph,
+)
+
+__all__ = [
+    "CSR",
+    "Graph",
+    "coo_to_csr",
+    "rmat_graph",
+    "sbm_graph",
+    "erdos_graph",
+    "partition_graph",
+    "cut_edges",
+    "partition_stats",
+    "hopcroft_karp",
+    "min_vertex_cover_bipartite",
+    "CommStats",
+    "HaloPlan",
+    "PartitionedGraph",
+    "build_partitioned_graph",
+]

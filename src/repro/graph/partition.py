@@ -1,0 +1,168 @@
+"""Graph partitioner (METIS stand-in).
+
+The paper uses METIS min-cut with node weights = in-degree + train mask
+(§7.2) so that both aggregation FLOPs and training samples stay balanced.
+METIS is unavailable offline; this module implements a partitioner with the
+same *objectives*:
+
+  1. seeded BFS region growing in a degree-aware order (locality),
+  2. Fennel-style streaming assignment for the remainder (balance vs cut
+     trade-off), and
+  3. boundary refinement passes (greedy KL-style moves that reduce the cut
+     subject to a balance cap).
+
+Quality bar (asserted in tests): balanced within ``imbalance`` and a cut that
+is well below a random partition's cut on community-structured graphs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.graph.structure import Graph, coo_to_csr
+
+
+def _neighbor_csr(g: Graph):
+    """Undirected neighbourhood CSR over both edge directions."""
+    src = np.concatenate([g.src, g.dst])
+    dst = np.concatenate([g.dst, g.src])
+    csr = coo_to_csr(src, dst, None, g.num_nodes, g.num_nodes)
+    return csr.indptr, csr.indices
+
+
+def default_node_weights(g: Graph) -> np.ndarray:
+    """Paper §7.2: weight = in-degree, plus train-mask so train nodes balance."""
+    w = 1.0 + g.in_degrees().astype(np.float64)
+    if g.train_mask is not None:
+        # Scale so train-sample balance matters as much as FLOP balance.
+        w = w + g.train_mask.astype(np.float64) * float(w.mean())
+    return w
+
+
+def partition_graph(
+    g: Graph,
+    nparts: int,
+    node_weights: Optional[np.ndarray] = None,
+    imbalance: float = 1.05,
+    refine_passes: int = 4,
+    seed: int = 0,
+) -> np.ndarray:
+    """Return part id per node in [0, nparts)."""
+    if nparts <= 1:
+        return np.zeros(g.num_nodes, dtype=np.int32)
+    rng = np.random.default_rng(seed)
+    n = g.num_nodes
+    w = default_node_weights(g) if node_weights is None else np.asarray(node_weights, np.float64)
+    cap = w.sum() / nparts * imbalance
+    indptr, indices = _neighbor_csr(g)
+
+    part = np.full(n, -1, dtype=np.int32)
+    load = np.zeros(nparts, dtype=np.float64)
+
+    # --- 1. BFS region growing from spread-out high-degree seeds.
+    deg = np.diff(indptr)
+    seeds = []
+    cand = np.argsort(-deg)[: max(4 * nparts, 64)]
+    cand = cand[rng.permutation(len(cand))]
+    for c in cand:
+        if len(seeds) == nparts:
+            break
+        if all(c != s for s in seeds):
+            seeds.append(int(c))
+    while len(seeds) < nparts:
+        seeds.append(int(rng.integers(0, n)))
+
+    from collections import deque
+
+    frontiers = [deque([s]) for s in seeds]
+    for p, s in enumerate(seeds):
+        if part[s] == -1:
+            part[s] = p
+            load[p] += w[s]
+    active = True
+    while active:
+        active = False
+        for p in range(nparts):
+            if load[p] >= cap:
+                continue
+            q = frontiers[p]
+            grabbed = 0
+            while q and grabbed < 64 and load[p] < cap:
+                u = q.popleft()
+                for v in indices[indptr[u]:indptr[u + 1]]:
+                    if part[v] == -1:
+                        part[v] = p
+                        load[p] += w[v]
+                        q.append(int(v))
+                        grabbed += 1
+                        if load[p] >= cap or grabbed >= 64:
+                            break
+            if grabbed:
+                active = True
+
+    # --- 2. Fennel-style streaming for disconnected leftovers.
+    rest = np.where(part == -1)[0]
+    rest = rest[rng.permutation(len(rest))]
+    gamma = 1.5
+    alpha = w.sum() * (nparts ** (gamma - 1)) / max(w.sum() ** gamma, 1e-9)
+    for u in rest:
+        nbr = indices[indptr[u]:indptr[u + 1]]
+        nbr_parts = part[nbr]
+        score = np.zeros(nparts, dtype=np.float64)
+        valid = nbr_parts >= 0
+        if valid.any():
+            np.add.at(score, nbr_parts[valid], 1.0)
+        score -= alpha * gamma * np.power(np.maximum(load, 0.0), gamma - 1.0)
+        score[load + w[u] > cap * 1.10] = -np.inf
+        p = int(np.argmax(score))
+        part[u] = p
+        load[p] += w[u]
+
+    # --- 3. Greedy boundary refinement (KL-flavoured single-node moves).
+    for _ in range(refine_passes):
+        moved = 0
+        # Boundary nodes: any neighbour in another part.
+        src_p, dst_p = part[g.src], part[g.dst]
+        boundary = np.unique(np.concatenate([g.src[src_p != dst_p], g.dst[src_p != dst_p]]))
+        boundary = boundary[rng.permutation(len(boundary))]
+        for u in boundary:
+            pu = part[u]
+            nbr = indices[indptr[u]:indptr[u + 1]]
+            if len(nbr) == 0:
+                continue
+            cnt = np.bincount(part[nbr], minlength=nparts).astype(np.float64)
+            gain = cnt - cnt[pu]
+            gain[pu] = 0.0
+            gain[load + w[u] > cap] = -np.inf
+            best = int(np.argmax(gain))
+            if gain[best] > 0:
+                part[u] = best
+                load[pu] -= w[u]
+                load[best] += w[u]
+                moved += 1
+        if moved == 0:
+            break
+    return part.astype(np.int32)
+
+
+def cut_edges(g: Graph, part: np.ndarray) -> np.ndarray:
+    """Boolean mask over edges whose endpoints live in different parts."""
+    return part[g.src] != part[g.dst]
+
+
+def partition_stats(g: Graph, part: np.ndarray) -> dict:
+    nparts = int(part.max()) + 1
+    cut = cut_edges(g, part)
+    w = default_node_weights(g)
+    loads = np.array([w[part == p].sum() for p in range(nparts)])
+    sizes = np.bincount(part, minlength=nparts)
+    return {
+        "nparts": nparts,
+        "cut_edges": int(cut.sum()),
+        "cut_fraction": float(cut.mean()) if g.num_edges else 0.0,
+        "load_imbalance": float(loads.max() / max(loads.mean(), 1e-9)),
+        "size_imbalance": float(sizes.max() / max(sizes.mean(), 1e-9)),
+        "sizes": sizes.tolist(),
+    }

@@ -1,0 +1,171 @@
+"""Host-side graph containers (numpy) used for preprocessing.
+
+The paper's pipeline does all graph preprocessing (partitioning, remote-graph
+construction, MVC) on the host with NetworkX/METIS before training; we mirror
+that split — numpy here, JAX arrays only in the training step.
+
+Edges are directed ``src -> dst``: messages flow from ``src`` into the
+aggregation of ``dst`` (i.e. ``src in N(dst)``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class CSR:
+    """Compressed-sparse-row adjacency grouped by destination row.
+
+    ``indptr[d]:indptr[d+1]`` spans the incoming neighbour slots of row ``d``;
+    ``indices`` holds source ids and ``weights`` the per-edge coefficients.
+    This layout *is* the paper's "clustering and sorting" (§4 step 1): all
+    sources that aggregate into the same destination are contiguous, so the
+    destination row can stay resident in the fastest memory tier.
+    """
+
+    indptr: np.ndarray  # [num_rows + 1] int32
+    indices: np.ndarray  # [nnz] int32 (source ids)
+    weights: np.ndarray  # [nnz] float32
+    num_rows: int
+    num_cols: int
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def row_degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+def coo_to_csr(
+    src: np.ndarray,
+    dst: np.ndarray,
+    weights: Optional[np.ndarray],
+    num_rows: int,
+    num_cols: int,
+) -> CSR:
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if weights is None:
+        weights = np.ones(src.shape[0], dtype=np.float32)
+    weights = np.asarray(weights, dtype=np.float32)
+    order = np.argsort(dst, kind="stable")
+    src, dst, weights = src[order], dst[order], weights[order]
+    indptr = np.zeros(num_rows + 1, dtype=np.int64)
+    np.add.at(indptr, dst + 1, 1)
+    indptr = np.cumsum(indptr).astype(np.int64)
+    return CSR(indptr=indptr, indices=src, weights=weights, num_rows=num_rows, num_cols=num_cols)
+
+
+@dataclass
+class Graph:
+    """A directed graph in COO form with optional edge weights."""
+
+    num_nodes: int
+    src: np.ndarray
+    dst: np.ndarray
+    edge_weight: Optional[np.ndarray] = None
+    # Optional node-level payloads used by the GCN datasets.
+    labels: Optional[np.ndarray] = None
+    train_mask: Optional[np.ndarray] = None
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.src = np.asarray(self.src, dtype=np.int32)
+        self.dst = np.asarray(self.dst, dtype=np.int32)
+        if self.src.shape != self.dst.shape:
+            raise ValueError("src/dst shape mismatch")
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    def in_degrees(self) -> np.ndarray:
+        deg = np.zeros(self.num_nodes, dtype=np.int64)
+        np.add.at(deg, self.dst, 1)
+        return deg
+
+    def out_degrees(self) -> np.ndarray:
+        deg = np.zeros(self.num_nodes, dtype=np.int64)
+        np.add.at(deg, self.src, 1)
+        return deg
+
+    def dedupe(self) -> "Graph":
+        key = self.src.astype(np.int64) * self.num_nodes + self.dst
+        _, keep = np.unique(key, return_index=True)
+        keep.sort()
+        ew = self.edge_weight[keep] if self.edge_weight is not None else None
+        return Graph(self.num_nodes, self.src[keep], self.dst[keep], ew,
+                     self.labels, self.train_mask, dict(self.meta))
+
+    def remove_self_loops(self) -> "Graph":
+        keep = self.src != self.dst
+        ew = self.edge_weight[keep] if self.edge_weight is not None else None
+        return Graph(self.num_nodes, self.src[keep], self.dst[keep], ew,
+                     self.labels, self.train_mask, dict(self.meta))
+
+    def add_self_loops(self) -> "Graph":
+        loops = np.arange(self.num_nodes, dtype=np.int32)
+        src = np.concatenate([self.src, loops])
+        dst = np.concatenate([self.dst, loops])
+        ew = None
+        if self.edge_weight is not None:
+            ew = np.concatenate([self.edge_weight, np.ones(self.num_nodes, np.float32)])
+        return Graph(self.num_nodes, src, dst, ew, self.labels, self.train_mask, dict(self.meta))
+
+    def make_undirected(self) -> "Graph":
+        """Mirror every edge (paper converts papers100M to undirected)."""
+        fwd = self.remove_self_loops()
+        src = np.concatenate([fwd.src, fwd.dst])
+        dst = np.concatenate([fwd.dst, fwd.src])
+        g = Graph(self.num_nodes, src, dst, None, self.labels, self.train_mask, dict(self.meta))
+        return g.dedupe()
+
+    def gcn_normalized(self, self_loops: bool = True) -> "Graph":
+        """Attach symmetric-normalized weights w_uv = d_u^-1/2 d_v^-1/2."""
+        g = self.add_self_loops() if self_loops else self
+        deg = np.zeros(g.num_nodes, dtype=np.float64)
+        np.add.at(deg, g.dst, 1.0)
+        inv_sqrt = np.where(deg > 0, 1.0 / np.sqrt(np.maximum(deg, 1.0)), 0.0)
+        w = (inv_sqrt[g.src] * inv_sqrt[g.dst]).astype(np.float32)
+        return Graph(g.num_nodes, g.src, g.dst, w, g.labels, g.train_mask, dict(g.meta))
+
+    def mean_normalized(self, self_loops: bool = True) -> "Graph":
+        """Attach mean-aggregator weights w_uv = 1/deg_in(v) (GraphSAGE)."""
+        g = self.add_self_loops() if self_loops else self
+        deg = np.zeros(g.num_nodes, dtype=np.float64)
+        np.add.at(deg, g.dst, 1.0)
+        w = (1.0 / np.maximum(deg[g.dst], 1.0)).astype(np.float32)
+        return Graph(g.num_nodes, g.src, g.dst, w, g.labels, g.train_mask, dict(g.meta))
+
+    def csr_by_dst(self) -> CSR:
+        return coo_to_csr(self.src, self.dst, self.edge_weight, self.num_nodes, self.num_nodes)
+
+
+def ell_from_csr(csr: CSR, max_nnz: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Convert CSR to padded ELL (indices, weights, mask).
+
+    The TPU aggregation kernel consumes fixed-shape neighbour slots; padding
+    slots point at row 0 with weight 0 so gathers stay in-bounds.
+    Returns (idx [R, K], w [R, K], valid [R, K]).
+    """
+    deg = csr.row_degrees()
+    k = int(deg.max()) if max_nnz is None else int(max_nnz)
+    k = max(k, 1)
+    rows = csr.num_rows
+    idx = np.zeros((rows, k), dtype=np.int32)
+    w = np.zeros((rows, k), dtype=np.float32)
+    valid = np.zeros((rows, k), dtype=bool)
+    if csr.nnz:
+        row_ids = np.repeat(np.arange(rows), deg)
+        slots = np.arange(csr.nnz) - csr.indptr[row_ids]
+        keep = slots < k
+        r, s = row_ids[keep], slots[keep]
+        idx[r, s] = csr.indices[keep]
+        w[r, s] = csr.weights[keep]
+        valid[r, s] = True
+    return idx, w, valid

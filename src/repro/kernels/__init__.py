@@ -1,0 +1,6 @@
+# The paper's compute hot-spots, as TPU Pallas kernels (DESIGN.md §3):
+#   seg_aggregate — blocked-ELL neighbour aggregation (paper §4 index_add/SpMM)
+#   quant_pack    — fused minmax + stochastic int2/4/8 quantize + pack (§7.3)
+from repro.kernels.ops import aggregate, dequantize_unpack, quantize_pack
+
+__all__ = ["aggregate", "quantize_pack", "dequantize_unpack"]

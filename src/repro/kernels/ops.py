@@ -1,0 +1,51 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU and are validated via the interpreter). On a real TPU
+backend the same calls lower to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.quant_pack import dequant_unpack, quant_pack
+from repro.kernels.seg_aggregate import seg_aggregate
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def aggregate(x, ell_idx, ell_w, *, use_kernel: bool = True, **kw):
+    """Neighbour aggregation: Pallas kernel (TPU target) or jnp fallback.
+
+    The jnp fallback is used for unaligned shapes and inside traced code
+    where interpret-mode pallas would be slow on CPU.
+    """
+    r, k = ell_idx.shape
+    n, f = x.shape
+    aligned = (f % 128 == 0) and (r % 8 == 0)
+    if use_kernel and aligned:
+        return seg_aggregate(x, ell_idx, ell_w, interpret=not _on_tpu(), **kw)
+    return ref.seg_aggregate_ref(x, ell_idx, ell_w)
+
+
+def quantize_pack(x, noise, *, bits: int = 2, use_kernel: bool = True):
+    per_word = 32 // bits
+    rows, feat = x.shape
+    aligned = (rows % 4 == 0) and (feat % per_word == 0)
+    if use_kernel and aligned:
+        return quant_pack(x, noise, bits=bits, interpret=not _on_tpu())
+    return ref.quant_pack_ref(x, noise, bits)
+
+
+def dequantize_unpack(packed, zero, scale, *, bits: int = 2, feat: int,
+                      use_kernel: bool = True):
+    rows = packed.shape[0]
+    if use_kernel and rows % 4 == 0:
+        return dequant_unpack(packed, zero, scale, bits=bits, feat=feat,
+                              interpret=not _on_tpu())
+    return ref.dequant_unpack_ref(packed, zero, scale, bits, feat)

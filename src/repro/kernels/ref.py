@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics the kernels must match (asserted across
+shape/dtype sweeps in tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def seg_aggregate_ref(
+    x: jax.Array,      # [N, F] source features
+    ell_idx: jax.Array,  # [R, K] int32 source ids per dst-row slot
+    ell_w: jax.Array,    # [R, K] f32 edge weights (0 = padding)
+) -> jax.Array:
+    """out[r] = sum_k ell_w[r, k] * x[ell_idx[r, k]] — the paper's index_add/SpMM."""
+    gathered = x[ell_idx]                      # [R, K, F]
+    return jnp.einsum("rk,rkf->rf", ell_w.astype(x.dtype), gathered)
+
+
+def quant_pack_ref(
+    x: jax.Array,        # [R, F] fp32, R % row_group == 0, F % (32//bits) == 0
+    noise: jax.Array,    # [R, F] uniform [0,1) stochastic-rounding noise
+    bits: int,
+    row_group: int = 4,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused per-row-group minmax + stochastic quantize + bit-pack.
+
+    Returns (packed int32 [R, F*bits/32], zero [R/row_group], scale [R/row_group]).
+    """
+    rows, feat = x.shape
+    levels = (1 << bits) - 1
+    g = rows // row_group
+    xg = x.reshape(g, row_group * feat)
+    lo = xg.min(axis=1)
+    hi = xg.max(axis=1)
+    scale = (hi - lo) / levels
+    rcp = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    xs = (x.reshape(g, row_group, feat) - lo[:, None, None]) * rcp[:, None, None]
+    q = jnp.clip(jnp.floor(xs + noise.reshape(g, row_group, feat)), 0, levels)
+    q = q.astype(jnp.uint32).reshape(rows, feat)
+    per_word = 32 // bits
+    qw = q.reshape(rows, feat // per_word, per_word)
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
+    packed = jnp.sum(qw << shifts, axis=-1, dtype=jnp.uint32).astype(jnp.int32)
+    return packed, lo, jnp.where(scale > 0, scale, 0.0)
+
+
+def dequant_unpack_ref(
+    packed: jax.Array,   # [R, F*bits/32] int32
+    zero: jax.Array,     # [R/row_group]
+    scale: jax.Array,    # [R/row_group]
+    bits: int,
+    feat: int,
+    row_group: int = 4,
+) -> jax.Array:
+    rows = packed.shape[0]
+    per_word = 32 // bits
+    pw = packed.astype(jnp.uint32)[:, :, None]
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32(levels) if (levels := (1 << bits) - 1) else jnp.uint32(0)
+    q = ((pw >> shifts) & mask).reshape(rows, feat).astype(jnp.float32)
+    g = rows // row_group
+    x = q.reshape(g, row_group, feat) * scale[:, None, None] + zero[:, None, None]
+    return x.reshape(rows, feat)

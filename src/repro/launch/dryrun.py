@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape) on the
+production meshes and extract roofline inputs.
+
+For each combination this lowers the real step function —
+
+  * train_4k     -> ``train_step`` (fwd + bwd + AdamW, microbatched)
+  * prefill_32k  -> ``forward_train`` logits (inference prefill)
+  * decode_32k / long_500k -> ``serve_step`` (1 token, KV/state cache)
+
+against ShapeDtypeStruct inputs with production shardings, calls
+``.lower().compile()``, and records ``memory_analysis()`` /
+``cost_analysis()`` plus the collective bytes parsed from the partitioned
+HLO. Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json``
+and feed §Dry-run/§Roofline of EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--gcn]
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_arch
+from repro.launch.hlo_stats import parse_collectives
+from repro.launch.input_specs import input_specs
+from repro.launch.mesh import make_production_mesh, make_worker_mesh
+from repro.models.transformer import forward_train, serve_step, train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def _cost_dict(cost) -> dict:
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out = {}
+    for k, v in dict(cost).items():
+        if k not in ("flops", "bytes accessed", "transcendentals"):
+            continue
+        try:
+            out[k] = float(v)
+        except Exception:
+            pass
+    return out
+
+
+def _layer_quantum(arch) -> int:
+    """Smallest layer-count step that keeps the arch structure valid."""
+    if arch.family == "hybrid":
+        return arch.attn_every
+    if arch.family == "ssm":
+        return arch.xlstm_group
+    return 1
+
+
+def reduced_arch(arch, num_layers: int):
+    import dataclasses as dc
+    kw = {"num_layers": num_layers}
+    if arch.family == "audio":
+        kw["enc_layers"] = num_layers
+    return dc.replace(arch, **kw)
+
+
+def cost_extrapolate(arch_name: str, shape_name: str, mesh) -> dict:
+    """HLO FLOPs/bytes with loop correction: cost_analysis counts while
+    bodies once, so measure L1- and L2-layer variants and extrapolate
+    linearly to the full depth (layer stacks are homogeneous scans).
+    Train shapes are measured at one microbatch of the global batch and
+    scaled by num_microbatches (optimizer flops ~O(N), negligible error)."""
+    import dataclasses as dc
+    arch = get_arch(arch_name)
+    q = _layer_quantum(arch)
+    l1, l2 = q, 2 * q
+    if arch.num_layers <= l2:
+        l1, l2 = None, arch.num_layers  # tiny model: measure directly
+    shape = INPUT_SHAPES[shape_name]
+    spec_probe = input_specs(arch, shape_name, mesh)
+    nm = spec_probe.get("num_microbatches") or 1
+
+    def measure(layers):
+        a = reduced_arch(arch, layers)
+        if shape.kind == "train" and nm > 1:
+            import repro.configs.shapes as SH
+            sh = dc.replace(shape, global_batch=shape.global_batch // nm)
+            sp = _specs_for(a, sh, mesh, num_microbatches=1)
+        else:
+            sp = _specs_for(a, shape, mesh, num_microbatches=1)
+        lowered = _lower(a, sp, mesh)
+        cost = _cost_dict(lowered.compile().cost_analysis())
+        return cost
+
+    c2 = measure(l2)
+    out = {"L2": l2, "cost_L2": c2, "num_microbatches": nm}
+    keys = [k for k in ("flops", "bytes accessed") if k in c2]
+    if l1 is not None:
+        c1 = measure(l1)
+        out["L1"] = l1
+        out["cost_L1"] = c1
+        est = {}
+        for k in keys:
+            per_layer = (c2[k] - c1[k]) / (l2 - l1)
+            est[k] = c2[k] + (arch.num_layers - l2) * per_layer
+        out["per_layer"] = {k: (c2[k] - c1[k]) / (l2 - l1) for k in keys}
+    else:
+        est = {k: c2[k] for k in keys}
+    if shape.kind == "train" and nm > 1:
+        est = {k: v * nm for k, v in est.items()}
+    out["estimated_full"] = est
+    return out
+
+
+def _specs_for(arch, shape, mesh, num_microbatches=None):
+    """input_specs but for an already-materialized (possibly reduced) arch
+    and shape object."""
+    from repro.launch import input_specs as IS
+    import repro.launch.input_specs as mod
+    reason = mod.skip_reason(arch, shape)
+    if reason:
+        return {"skip": reason}
+    window = mod.effective_window(arch, shape)
+    params, pspecs = mod.param_input_specs(arch, mesh,
+                                           fsdp=(shape.kind == "train"))
+    out = {"params": params, "param_specs": pspecs, "window": window,
+           "shape": shape}
+    if shape.kind == "train":
+        out["opt_state"] = mod.opt_input_specs(params, pspecs, mesh)
+        out["batch"] = mod.batch_input_specs(arch, shape, mesh)
+        out["num_microbatches"] = (num_microbatches if num_microbatches
+                                   else mod.num_microbatches(arch, shape, mesh))
+    elif shape.kind == "prefill":
+        out["batch"] = mod.batch_input_specs(arch, shape, mesh)
+    else:
+        cache, tokens = mod.decode_input_specs(arch, shape, mesh)
+        out["cache"] = cache
+        out["tokens"] = tokens
+    return out
+
+
+def _lower(arch, spec, mesh):
+    window = spec["window"]
+    shape = spec["shape"]
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            nm = spec["num_microbatches"]
+            fn = functools.partial(train_step, cfg=arch, lr=3e-4,
+                                   num_microbatches=nm, window=window)
+            return jax.jit(fn).lower(spec["params"], spec["opt_state"],
+                                     spec["batch"])
+        if shape.kind == "prefill":
+            def prefill(params, batch):
+                tokens = batch["tokens"]
+                extra = {k: v for k, v in batch.items() if k != "tokens"}
+                logits, _ = forward_train(params, arch, tokens, extra or None,
+                                          window)
+                return logits
+            return jax.jit(prefill).lower(spec["params"], spec["batch"])
+        fn = functools.partial(serve_step, cfg=arch, window=window)
+        def decode(params, cache, tokens):
+            return fn(params, cache, tokens)
+        return jax.jit(decode).lower(spec["params"], spec["cache"],
+                                     spec["tokens"])
+
+
+def build_lowered(arch_name: str, shape_name: str, mesh):
+    arch = get_arch(arch_name)
+    spec = input_specs(arch, shape_name, mesh)
+    if "skip" in spec:
+        return None, spec["skip"]
+    lowered = _lower(arch, spec, mesh)
+    meta = {"num_microbatches": spec.get("num_microbatches"),
+            "window": spec["window"], "kind": spec["shape"].kind}
+    return lowered, meta
+
+
+def run_one(arch_name: str, shape_name: str, multi_pod: bool,
+            save: bool = True, hlo_out: bool = False,
+            extrapolate: bool = None) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "chips": 512 if multi_pod else 256, "status": "ok"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered, meta = build_lowered(arch_name, shape_name, mesh)
+        if lowered is None:
+            rec["status"] = "skip"
+            rec["skip_reason"] = meta
+            return _finish(rec, t0, save)
+        rec.update(meta)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["memory"] = _mem_dict(compiled.memory_analysis())
+        rec["cost"] = _cost_dict(compiled.cost_analysis())
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        # Loop-aware FLOP/traffic estimate (cost_analysis counts while bodies
+        # once — verified — so §Roofline uses this HLO walk instead).
+        from repro.launch.hlo_stats import analyze_hlo
+        rec["hlo_analysis"] = analyze_hlo(hlo)
+        rec["hlo_bytes"] = len(hlo)
+        if hlo_out:
+            (OUT_DIR / f"{arch_name}__{shape_name}__{mesh_name}.hlo").write_text(hlo)
+        print(compiled.memory_analysis())
+        ca = rec["cost"]
+        print(f"  flops={ca.get('flops', 0):.3e} bytes={ca.get('bytes accessed', 0):.3e} "
+              f"coll_operand_bytes={rec['collectives']['total']['operand_bytes']:.3e}")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    return _finish(rec, t0, save)
+
+
+def _finish(rec: dict, t0: float, save: bool) -> dict:
+    rec["total_s"] = round(time.time() - t0, 2)
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        path = OUT_DIR / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+        path.write_text(json.dumps(rec, indent=1, default=str))
+    tag = rec["status"].upper()
+    print(f"[{tag}] {rec['arch']} x {rec['shape']} on {rec['mesh']} "
+          f"({rec['total_s']}s)" + (f" :: {rec.get('error','')}" if tag == "ERROR" else ""))
+    return rec
+
+
+def run_gcn_dryrun(multi_pod: bool, save: bool = True) -> dict:
+    """Dry-run the paper's own distributed GCN trainer on the production mesh
+    (1-D graph-parallel over all chips)."""
+    import numpy as np
+    from repro.core import DistConfig, GCNConfig
+    from repro.core.trainer import make_dist_train_step, WorkerData, prepare_distributed
+    from repro.graph import build_partitioned_graph, rmat_graph
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": "supergcn-graphsage", "shape": "rmat18-fullbatch",
+           "mesh": mesh_name, "chips": 512 if multi_pod else 256, "status": "ok"}
+    t0 = time.time()
+    try:
+        nparts = 512 if multi_pod else 256
+        gmesh = make_worker_mesh(nparts)
+        # Structural stand-in graph (host preprocessing at laptop scale).
+        g = rmat_graph(13, edge_factor=8, seed=7).mean_normalized()
+        g.labels = np.zeros(g.num_nodes, np.int32)
+        g.train_mask = np.ones(g.num_nodes, bool)
+        pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
+        feat = 128
+        x = np.zeros((g.num_nodes, feat), np.float32)
+        wd = prepare_distributed(g, x, pg)
+        cfg = GCNConfig(model="sage", in_dim=feat, hidden_dim=256,
+                        num_classes=40, num_layers=3, quant_bits=2)
+        dc = DistConfig(nparts=nparts, bits=2)
+        worker0 = make_dist_train_step(cfg, dc)
+
+        def worker(params, wdata, key):
+            # shard_map keeps the sharded leading axis as size 1 — strip it.
+            wdata = jax.tree_util.tree_map(lambda x: x[0], wdata)
+            return worker0(params, wdata, key)
+        from repro.core.model import init_params
+        params = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        pspec = jax.tree_util.tree_map(lambda _: P(), params)
+        dspec = jax.tree_util.tree_map(lambda _: P(dc.axis_name), wd)
+        step = shard_map(worker, mesh=gmesh,
+                         in_specs=(P(), dspec, P()), out_specs=(P(), P()),
+                         check_rep=False)
+        p_sds = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(gmesh, P())), params)
+        wd_sds = jax.tree_util.tree_map(
+            lambda a, sp: jax.ShapeDtypeStruct(
+                a.shape, a.dtype, sharding=NamedSharding(gmesh, sp)), wd, dspec)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                   sharding=NamedSharding(gmesh, P()))
+        lowered = jax.jit(step).lower(p_sds, wd_sds, key)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["memory"] = _mem_dict(compiled.memory_analysis())
+        rec["cost"] = _cost_dict(compiled.cost_analysis())
+        rec["collectives"] = parse_collectives(compiled.as_text())
+        rec["comm_stats"] = pg.stats.as_dict()
+        print(compiled.memory_analysis())
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    return _finish(rec, t0, save)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--gcn", action="store_true",
+                    help="dry-run the SuperGCN distributed trainer")
+    ap.add_argument("--hlo-out", action="store_true")
+    args = ap.parse_args()
+
+    if args.gcn:
+        run_gcn_dryrun(args.multi_pod)
+        return
+    if args.all:
+        results = []
+        for a in ARCH_NAMES:
+            for s in INPUT_SHAPES:
+                results.append(run_one(a, s, args.multi_pod, hlo_out=args.hlo_out))
+        ok = sum(r["status"] == "ok" for r in results)
+        skip = sum(r["status"] == "skip" for r in results)
+        err = sum(r["status"] == "error" for r in results)
+        print(f"\n== dry-run summary: {ok} ok / {skip} skip / {err} error ==")
+        raise SystemExit(1 if err else 0)
+    if not (args.arch and args.shape):
+        ap.error("need --arch and --shape (or --all / --gcn)")
+    rec = run_one(args.arch, args.shape, args.multi_pod, hlo_out=args.hlo_out)
+    raise SystemExit(0 if rec["status"] in ("ok", "skip") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,362 @@
+"""Parse collective-communication statistics out of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` has FLOPs and bytes but no collective volumes,
+so we walk the partitioned (per-device) HLO module:
+
+* collectives are summed per computation,
+* ``while`` ops multiply their body's stats by the known trip count (layer
+  scans / microbatch scans execute their body L times — a static sum would
+  undercount by L), ``call``/``conditional`` bodies count once,
+* operand sizes are derived from the result type + op semantics + replica
+  group size g (optimized HLO prints operands without inline types):
+
+  op                  operand bytes      ring wire bytes per device
+  all-gather          result / g         result * (g-1)/g
+  all-reduce          result             result * 2(g-1)/g
+  reduce-scatter      result * g         result * (g-1)
+  all-to-all          result             result * (g-1)/g
+  collective-permute  result             result
+
+Shapes in SPMD HLO are per-device, so the summed wire bytes are the
+per-device per-step collective traffic:
+
+    collective_term_seconds = wire_bytes / link_bw
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_TYPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|f32|f64|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+# NB: tuple result types contain /*index=N*/ comments (with '='), so the
+# span between '=' and the op name must allow '='.
+_OP_RE = re.compile(
+    r"=\s+.*?\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_COMP_START_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:call|conditional)\(.*")
+_TO_APPLY_RE = re.compile(r"(?:to_apply|branch_computations|true_computation|"
+                          r"false_computation)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_stats(line: str):
+    m = _OP_RE.search(line)
+    if not m:
+        return None
+    kind = m.group(1)
+    op_pos = line.index(kind, m.start())
+    result_types = _TYPE_RE.findall(line[m.start():op_pos])
+    if not result_types:
+        return None
+    result = sum(_type_bytes(d, s) for d, s in result_types)
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        g = int(gm.group(2))
+    else:
+        gl = _GROUPS_LIST_RE.search(line)  # explicit {{0,1,...},...} format
+        g = len(gl.group(1).split(",")) if gl else 1
+    g = max(g, 1)
+    if kind == "all-gather":
+        operand, wire = result // g, result * (g - 1) / g
+    elif kind == "all-reduce":
+        operand, wire = result, result * 2 * (g - 1) / g
+    elif kind == "reduce-scatter":
+        operand, wire = result * g, result * (g - 1)
+    elif kind == "all-to-all":
+        operand, wire = result, result * (g - 1) / g
+    else:
+        operand, wire = result, result
+    return kind, operand, result, wire
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Header lines look like ``%name (args...) -> type {`` (possibly with an
+    ``ENTRY`` prefix); bodies end at a lone ``}``."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and ") -> " in line and "=" not in \
+                line.split("(", 1)[0]:
+            head = stripped[len("ENTRY "):] if stripped.startswith("ENTRY ") else stripped
+            cur = head.split(" (", 1)[0].split("(", 1)[0].lstrip("%").strip()
+            comps[cur] = []
+            if stripped.startswith("ENTRY"):
+                entry = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    comps["__entry__"] = [entry or ""]
+    return comps
+
+
+def _zero():
+    return {k: {"count": 0.0, "operand_bytes": 0.0, "result_bytes": 0.0,
+                "wire_bytes": 0.0} for k in KINDS}
+
+
+def _merge(acc, extra, factor=1.0):
+    for k in KINDS:
+        for f in acc[k]:
+            acc[k][f] += extra[k][f] * factor
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    comps = _split_computations(hlo_text)
+    entry = comps.pop("__entry__")[0]
+    memo: Dict[str, dict] = {}
+
+    def eval_comp(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return _zero()
+        acc = _zero()
+        for line in comps[name]:
+            ls = _line_stats(line)
+            if ls:
+                kind, operand, result, wire = ls
+                # async -done lines carry no inline type and are skipped by
+                # _line_stats (no result types), so no double counting.
+                acc[kind]["count"] += 1
+                acc[kind]["operand_bytes"] += operand
+                acc[kind]["result_bytes"] += result
+                acc[kind]["wire_bytes"] += wire
+                continue
+            wm = _WHILE_RE.search(line)
+            if wm and "=" in line:
+                body = wm.group(1)
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                _merge(acc, eval_comp(body, stack + (name,)), trips)
+                continue
+            if " call(" in line or " conditional(" in line:
+                am = _TO_APPLY_RE.search(line)
+                if am:
+                    for target in re.split(r",\s*%?", am.group(1)):
+                        _merge(acc, eval_comp(target, stack + (name,)), 1.0)
+        memo[name] = acc
+        return acc
+
+    # Fallback: if entry isn't identified, flat-sum everything once.
+    if entry and entry in comps:
+        acc = eval_comp(entry)
+    else:
+        acc = _zero()
+        for name in comps:
+            _merge(acc, eval_comp(name))
+
+    total = {f: sum(acc[k][f] for k in KINDS)
+             for f in ("count", "operand_bytes", "result_bytes", "wire_bytes")}
+    out = {k: v for k, v in acc.items() if v["count"]}
+    out["total"] = total
+    return out
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    return [int(x) for x in _TRIP_RE.findall(hlo_text)]
+
+
+# --------------------------------------------------------------------------
+# Loop-aware FLOP / HBM-traffic estimation
+#
+# XLA's cost_analysis() counts while bodies ONCE (verified empirically), so
+# layer scans and microbatch scans would undercount by their trip counts.
+# We therefore walk the optimized HLO ourselves:
+#   * dot FLOPs: 2 * |result| * K, K = product of lhs contracting dims
+#     (operand shapes resolved through a per-computation symbol table;
+#     dots inside fusions are found by traversing the fusion computation),
+#   * HBM traffic: sum of (result + operand) bytes of fusion/dot/collective/
+#     scatter/gather/dynamic-slice ops — post-fusion these are XLA's actual
+#     memory-traffic units (elementwise chains live inside fusions),
+#   * while bodies multiplied by known trip counts, calls/conditionals once.
+# --------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|f32|f64|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+_TRAFFIC_OPS = {"fusion", "dot", "convolution", "scatter", "gather",
+                "dynamic-slice", "dynamic-update-slice", "copy", "reduce",
+                "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "transpose", "reshape", "concatenate",
+                "select", "add", "multiply", "pad", "slice", "broadcast",
+                "iota", "convert", "compare", "exponential", "tanh", "sort"}
+_META_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "custom-call", "partition-id", "replica-id"}
+
+
+def _parse_type(type_str: str):
+    """-> (total_bytes, dims_of_first_array_or_None)."""
+    matches = _SHAPE_RE.findall(type_str)
+    if not matches:
+        return 0, None
+    total = 0
+    first_dims = None
+    for dt, dims in matches:
+        n = 1
+        dl = []
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+                dl.append(int(d))
+        total += n * _DTYPE_BYTES[dt]
+        if first_dims is None:
+            first_dims = dl
+    return total, first_dims
+
+
+def _index_defs(lines: List[str]):
+    """name -> (bytes, dims, op, line) for one computation body."""
+    table = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        b, dims = _parse_type(type_str)
+        table[name] = (b, dims, op, line)
+    return table
+
+
+def _dot_flops(line: str, table) -> float:
+    b, dims = _parse_type(line.split("=", 1)[1].split(" dot(", 1)[0])
+    if dims is None:
+        return 0.0
+    result_elems = 1
+    for d in dims:
+        result_elems *= d
+    cm = _LHS_CONTRACT_RE.search(line)
+    # lhs operand name = first %ref inside the dot(...) parens
+    try:
+        args = line.split(" dot(", 1)[1]
+        lhs_name = _OPERAND_RE.search(args).group(1)
+        lhs_dims = table[lhs_name][1]
+    except Exception:
+        return 0.0
+    if cm is None or lhs_dims is None:
+        return 0.0
+    k = 1
+    for idx in cm.group(1).split(","):
+        if idx.strip():
+            k *= lhs_dims[int(idx)]
+    return 2.0 * result_elems * k
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    """Loop-aware {dot_flops, traffic_bytes} + collective stats."""
+    comps = _split_computations(hlo_text)
+    entry = comps.pop("__entry__")[0]
+    tables = {name: _index_defs(lines) for name, lines in comps.items()}
+    flops_memo: Dict[str, float] = {}
+
+    def comp_flops(name: str, stack=()) -> float:
+        """dot FLOPs of a computation, following fusions/calls/whiles."""
+        if name in flops_memo:
+            return flops_memo[name]
+        if name in stack or name not in comps:
+            return 0.0
+        total = 0.0
+        table = tables[name]
+        for line in comps[name]:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            op = m.group(3)
+            if op == "dot":
+                total += _dot_flops(line, table)
+            elif op == "fusion":
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    total += comp_flops(cm.group(1), stack + (name,))
+            elif op == "while":
+                wm = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if wm:
+                    total += comp_flops(wm.group(1), stack + (name,)) * (
+                        int(tm.group(1)) if tm else 1)
+            elif op in ("call", "conditional"):
+                am = _TO_APPLY_RE.search(line)
+                if am:
+                    for target in re.split(r",\s*%?", am.group(1)):
+                        total += comp_flops(target, stack + (name,))
+        flops_memo[name] = total
+        return total
+
+    traffic_memo: Dict[str, float] = {}
+
+    def comp_traffic(name: str, stack=()) -> float:
+        if name in traffic_memo:
+            return traffic_memo[name]
+        if name in stack or name not in comps:
+            return 0.0
+        total = 0.0
+        table = tables[name]
+        for line in comps[name]:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            op = m.group(3)
+            if op == "while":
+                wm = _WHILE_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                if wm:
+                    total += comp_traffic(wm.group(1), stack + (name,)) * (
+                        int(tm.group(1)) if tm else 1)
+                continue
+            if op in ("call", "conditional"):
+                am = _TO_APPLY_RE.search(line)
+                if am:
+                    for target in re.split(r",\s*%?", am.group(1)):
+                        total += comp_traffic(target, stack + (name,))
+                continue
+            if op in _META_OPS or op not in _TRAFFIC_OPS:
+                continue
+            res_bytes = table.get(m.group(1), (0, None, op, ""))[0]
+            total += res_bytes
+            # operand bytes via symbol lookup (refs only, no inline types)
+            args = line[line.index("(", line.index(op)):]
+            for ref in _OPERAND_RE.findall(args.split("), ")[0]):
+                if ref in table:
+                    total += table[ref][0]
+        traffic_memo[name] = total
+        return total
+
+    if entry and entry in comps:
+        flops = comp_flops(entry)
+        traffic = comp_traffic(entry)
+    else:
+        flops = sum(comp_flops(n) for n in comps)
+        traffic = sum(comp_traffic(n) for n in comps)
+    return {"dot_flops": flops, "traffic_bytes": traffic}

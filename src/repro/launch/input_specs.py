@@ -1,0 +1,129 @@
+"""ShapeDtypeStruct stand-ins for every (arch × input-shape) combination.
+
+Weak-type-correct, sharding-attached, zero device allocation — the dry-run
+lowers ``train_step`` / ``forward_train`` (prefill) / ``serve_step`` against
+these (DESIGN.md §6). Modality frontends are stubbed here: audio supplies
+precomputed frame embeddings, VLM supplies patch embeddings (the assignment
+carve-out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape, get_shape
+from repro.models import common as C
+from repro.models.transformer import ArchConfig, init_cache, init_params
+from repro.optim.adamw import AdamWState
+from repro.sharding import specs as SP
+
+# Archs that need the sliding-window attention variant to run long_500k
+# sub-quadratically (dense/vlm/moe families). SSM/hybrid run natively.
+LONG_CONTEXT_WINDOW = 8192
+# Token budget per device per microbatch (activation-memory bound, DESIGN §6).
+MB_TOKENS_PER_DEVICE = 8192
+
+
+def skip_reason(arch: ArchConfig, shape: InputShape) -> Optional[str]:
+    if arch.family == "audio" and shape.name == "long_500k":
+        return ("whisper-small: enc-dec audio model with 30s receptive field; "
+                "524k-token decode is architecturally meaningless (DESIGN.md §5)")
+    return None
+
+
+def effective_window(arch: ArchConfig, shape: InputShape) -> Optional[int]:
+    """Sliding window override for long_500k on attention-bearing archs."""
+    if shape.name == "long_500k" and arch.family in ("dense", "moe", "vlm", "hybrid"):
+        return min(arch.window, LONG_CONTEXT_WINDOW) if arch.window else LONG_CONTEXT_WINDOW
+    return arch.window
+
+
+def num_microbatches(arch: ArchConfig, shape: InputShape, mesh: Mesh) -> int:
+    dp = 1
+    for a in SP.data_axes(mesh):
+        dp *= mesh.shape[a]
+    tokens_per_dev = shape.global_batch * shape.seq_len // max(dp, 1)
+    nm = max(1, tokens_per_dev // MB_TOKENS_PER_DEVICE)
+    while shape.global_batch % nm:
+        nm -= 1
+    return nm
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _spec_tree(shapes_tree, specs_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes_tree, specs_tree)
+
+
+def param_input_specs(arch: ArchConfig, mesh: Mesh, fsdp: bool = True):
+    shapes = jax.eval_shape(lambda k: init_params(k, arch), jax.random.PRNGKey(0))
+    specs = SP.param_specs(shapes, mesh, fsdp=fsdp)
+    return _spec_tree(shapes, specs, mesh), specs
+
+
+def opt_input_specs(param_sds, param_specs_tree, mesh: Mesh):
+    step = _sds((), jnp.int32, mesh, P())
+    mu = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, s.dtype, mesh, s.sharding.spec), param_sds)
+    nu = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, s.dtype, mesh, s.sharding.spec), param_sds)
+    return AdamWState(step=step, mu=mu, nu=nu)
+
+
+def batch_input_specs(arch: ArchConfig, shape: InputShape, mesh: Mesh) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    bspec = SP.batch_spec(mesh, b, extra_dims=1)
+    batch = {"tokens": _sds((b, s), jnp.int32, mesh, bspec)}
+    if arch.family == "audio":
+        batch["frames"] = _sds((b, arch.enc_frames, arch.d_model), jnp.float32,
+                               mesh, SP.batch_spec(mesh, b, extra_dims=2))
+    if arch.family == "vlm":
+        batch["patches"] = _sds((b, arch.vision_patches, arch.d_model), jnp.float32,
+                                mesh, SP.batch_spec(mesh, b, extra_dims=2))
+    return batch
+
+
+def decode_input_specs(arch: ArchConfig, shape: InputShape, mesh: Mesh):
+    b = shape.global_batch
+    window = effective_window(arch, shape)
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(arch, b, shape.seq_len, window=window))
+    cache_specs = SP.cache_specs(cache_shapes, mesh, b)
+    cache = _spec_tree(cache_shapes, cache_specs, mesh)
+    tokens = _sds((b, 1), jnp.int32, mesh, SP.batch_spec(mesh, b, extra_dims=1))
+    return cache, tokens
+
+
+def input_specs(arch: ArchConfig, shape_name: str, mesh: Mesh) -> Dict[str, Any]:
+    """Everything needed to lower the step function for this combination."""
+    shape = get_shape(shape_name)
+    reason = skip_reason(arch, shape)
+    if reason:
+        return {"skip": reason}
+    window = effective_window(arch, shape)
+    # §Perf iteration C: inference shapes drop the FSDP ('data') axis from
+    # weight specs — per-layer weight all-gathers don't amortize over one
+    # decoded token (TP-only params; memory checked by the dry-run).
+    params, pspecs = param_input_specs(arch, mesh, fsdp=(shape.kind == "train"))
+    out: Dict[str, Any] = {"params": params, "param_specs": pspecs,
+                           "window": window, "shape": shape}
+    if shape.kind == "train":
+        out["opt_state"] = opt_input_specs(params, pspecs, mesh)
+        out["batch"] = batch_input_specs(arch, shape, mesh)
+        out["num_microbatches"] = num_microbatches(arch, shape, mesh)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_input_specs(arch, shape, mesh)
+    else:  # decode
+        cache, tokens = decode_input_specs(arch, shape, mesh)
+        out["cache"] = cache
+        out["tokens"] = tokens
+    return out

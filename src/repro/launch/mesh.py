@@ -1,0 +1,21 @@
+"""Production mesh definitions (TPU v5e target).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets the 512-device XLA flag before import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_worker_mesh(nworkers: int, axis: str = "workers"):
+    """1-D graph-parallel mesh for the distributed GCN trainer."""
+    return jax.make_mesh((nworkers,), (axis,))

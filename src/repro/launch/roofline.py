@@ -1,0 +1,168 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod mesh, derive the three terms — all
+per-device per-step, in seconds (SPMD HLO shapes are per-device, so the
+"/ chips" in the spec formulas is already applied):
+
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, TPU v5e)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = collective_wire_bytes / link_bw (~50 GB/s/link ICI)
+
+HLO_FLOPs/bytes come from ``cost_analysis`` with the loop-count correction
+(dryrun.cost_extrapolate); collective wire bytes from the loop-aware HLO
+walk (hlo_stats). MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) /
+2·N_active·B (decode) per device; MODEL/HLO flags remat & redundancy waste.
+
+  python -m repro.launch.roofline [--json] [--update-experiments]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_arch, get_shape
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per link ICI
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def n_active_params(arch) -> tuple:
+    """(total, active) params; active discounts non-routed experts."""
+    n_total = arch.param_count()
+    if arch.moe is None:
+        return n_total, n_total
+    per_expert = 3 * arch.d_model * arch.moe.d_ff_expert
+    routed = arch.num_layers * arch.moe.num_experts * per_expert
+    active = arch.num_layers * arch.moe.top_k * per_expert
+    return n_total, n_total - routed + active
+
+
+def model_flops_per_device(arch, shape, chips: int) -> float:
+    n_total, n_active = n_active_params(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    return 2.0 * n_active * shape.global_batch / chips  # decode: 1 token/seq
+
+
+def analyze_record(rec: dict) -> dict:
+    arch = get_arch(rec["arch"])
+    shape = get_shape(rec["shape"])
+    chips = rec["chips"]
+    # FLOPs: loop-aware dot walk (hlo_stats.analyze_hlo, validated exact on
+    # known scans; XLA cost_analysis counts while bodies once and would
+    # undercount by the layer/microbatch trip counts).
+    ana = rec.get("hlo_analysis", {})
+    flops = ana.get("dot_flops", rec.get("cost", {}).get("flops", 0.0))
+    # HBM bytes: compiled per-device footprint (arguments read + outputs
+    # written + 2x temp) from memory_analysis(). A static-HLO traffic walk
+    # overcounts sliced operands (full stacked-param tensors per scan step),
+    # so the footprint proxy is the defensible per-step lower bound; train
+    # shapes re-read params once per microbatch, which it omits — noted in
+    # EXPERIMENTS.md §Roofline.
+    mem = rec.get("memory", {})
+    bytes_ = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("output_size_in_bytes", 0)
+              + 2 * mem.get("temp_size_in_bytes", 0))
+    wire = rec.get("collectives", {}).get("total", {}).get("wire_bytes", 0.0)
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = wire / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(arch, shape, chips)
+    ratio = mf / flops if flops else 0.0
+
+    advice = {
+        "compute": "compute-bound: raise MXU utilization (larger matmul tiles, "
+                   "bf16 throughout) or shrink redundant FLOPs (remat policy)",
+        "memory": "HBM-bound: fuse elementwise chains, cut activation "
+                  "round-trips (saved-tensor policy), use bf16 saves",
+        "collective": "collective-bound: re-place shardings to remove "
+                      "all-gathers (kv-head/seq cache layout, FSDP prefetch "
+                      "granularity), or quantize the transfer (paper §6)",
+    }[dominant]
+    peak_t = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": rec["status"], "kind": rec.get("kind", shape.kind),
+        "hlo_flops": flops, "hlo_bytes": bytes_, "coll_wire_bytes": wire,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "model_over_hlo": ratio,
+        "roofline_fraction": (t_compute / peak_t) if peak_t else 0.0,
+        "temp_bytes": rec.get("memory", {}).get("temp_size_in_bytes"),
+        "advice": advice,
+    }
+
+
+def load_records(mesh: str = "16x16"):
+    recs = []
+    for a in ARCH_NAMES:
+        for s in INPUT_SHAPES:
+            p = OUT_DIR / f"{a}__{s}__{mesh}.json"
+            if p.exists():
+                recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "6ND/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    body = []
+    for r in rows:
+        if r["status"] == "skip":
+            body.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — |")
+            continue
+        if r["status"] != "ok":
+            body.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — |")
+            continue
+        body.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['model_over_hlo']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |")
+    return hdr + "\n".join(body) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.mesh)
+    rows = []
+    for rec in recs:
+        if rec["status"] == "ok":
+            rows.append(analyze_record(rec))
+        else:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": rec["status"]})
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(fmt_table(rows))
+        ok = [r for r in rows if r["status"] == "ok"]
+        if ok:
+            worst = min(ok, key=lambda r: r["roofline_fraction"])
+            collbound = max(ok, key=lambda r: r.get("t_collective_s", 0))
+            print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']}"
+                  f" ({worst['roofline_fraction']:.3f})")
+            print(f"most collective-bound: {collbound['arch']} x "
+                  f"{collbound['shape']} ({collbound['t_collective_s']:.3e}s)")
+    out = Path(OUT_DIR).parent / f"roofline_{args.mesh}.json"
+    out.write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""GQA attention: train (chunked causal), prefill, and single-token decode.
+
+Memory-bounded by scanning over query chunks so the [Sq, Sk] score matrix
+never fully materializes (required for prefill_32k; see DESIGN.md §6).
+Supports optional QKV bias (qwen2.5), sliding-window masks (the
+sub-quadratic variant used for dense archs on long_500k), and M-RoPE.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+class AttnConfig(NamedTuple):
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None       # sliding window (tokens), None = full
+    mrope_sections: Optional[Tuple[int, ...]] = None
+
+
+def init_attention(key, d_model: int, cfg: AttnConfig):
+    ks = jax.random.split(key, 4)
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "w_q": C.normal_init(ks[0], (d_model, h * hd)),
+        "w_k": C.normal_init(ks[1], (d_model, kv * hd)),
+        "w_v": C.normal_init(ks[2], (d_model, kv * hd)),
+        "w_o": C.normal_init(ks[3], (h * hd, d_model)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h * hd,), jnp.float32)
+        p["b_k"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["b_v"] = jnp.zeros((kv * hd,), jnp.float32)
+    return p
+
+
+def _constrain_bshd(x: jax.Array) -> jax.Array:
+    """Pin [B, S, H, hd] activations to (batch->data, heads->model).
+
+    §Perf iteration B: without this, head counts that don't divide the
+    model axis (qwen2.5's 40 H on 16-way TP) make GSPMD fall back to
+    sequence-sharded softmax — an all-reduce per q-chunk per layer
+    (measured 4,483 all-reduces / 44 TB wire on qwen prefill). An explicit
+    head constraint instead pads 40 -> 48 head-shards (~20% head waste,
+    no softmax collectives). No-op outside a mesh context.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        names = tuple(getattr(am, "axis_names", ()) or ())
+    except Exception:
+        return x
+    if "model" not in names:
+        return x
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    b = x.shape[0]
+    dp_size = 1
+    for a in dp:
+        dp_size *= int(am.shape[a])
+    bspec = dp if (dp and b % dp_size == 0) else None
+    if x.shape[1] == 1:
+        # Decode (S=1): replicate the tiny new-token projections over
+        # 'model'. Leaving the TP column shard on them propagates into the
+        # [B, S_cache, ...] broadcast of the where-update and forces a
+        # full-cache all-gather every layer (measured: 2 x 537 MB gathers
+        # per layer on llama3.2 decode — §Perf iter A refinement 2).
+        return jax.lax.with_sharding_constraint(x, P(bspec, None, None, None))
+    return jax.lax.with_sharding_constraint(
+        x, P(bspec, None, "model", None))
+
+
+def _model_axis_size() -> int:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        names = tuple(getattr(am, "axis_names", ()) or ())
+        return int(am.shape["model"]) if "model" in names else 0
+    except Exception:
+        return 0
+
+
+def _project_qkv(p, x, cfg: AttnConfig):
+    b, s, _ = x.shape
+    q = x @ p["w_q"].astype(x.dtype)
+    k = x @ p["w_k"].astype(x.dtype)
+    v = x @ p["w_v"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(x.dtype)
+        k = k + p["b_k"].astype(x.dtype)
+        v = v + p["b_v"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    # Perf iter B refinement: constrain only when GSPMD cannot shard the
+    # head axis itself (e.g. qwen2.5's 40 H on 16-way TP, where propagation
+    # falls back to seq-sharded softmax). When heads divide the axis the
+    # default placement is already head-sharded — constraining anyway
+    # costs extra reshards (tinyllama train wire regressed 2.8x).
+    msize = _model_axis_size()
+    if s == 1 or (msize and cfg.num_heads % msize != 0):
+        q = _constrain_bshd(q)
+        k = _constrain_bshd(k)
+        v = _constrain_bshd(v)
+    return q, k, v
+
+
+def _rope(q, k, positions, cfg: AttnConfig):
+    if cfg.mrope_sections is not None:
+        if positions.ndim == 2:  # text-only: t = h = w = pos
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = C.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = C.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = C.apply_rope(q, positions, cfg.rope_theta)
+        k = C.apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def sdpa_chunked(
+    q: jax.Array,           # [B, Sq, H, hd]
+    k: jax.Array,           # [B, Sk, KV, hd]
+    v: jax.Array,           # [B, Sk, KV, hd]
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,   # absolute position of q[0] relative to k[0]
+    window: Optional[int] = None,
+    kv_valid_len: Optional[jax.Array] = None,  # mask cache tail in decode
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Scaled dot-product attention, scanning over query chunks."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kx = jnp.repeat(k, rep, axis=2)   # [B, Sk, H, hd]
+    vx = jnp.repeat(v, rep, axis=2)
+    kpos = jnp.arange(sk)
+
+    def _constrain_seq_sharded(t, axis_spec):
+        """Flash-decoding hint: keep the cache-seq axis model-sharded so the
+        partitioner does partial softmax + tiny all-reduce instead of
+        replicating the f32-cast cache to shard heads (measured 2 x 1.07 GB
+        gathers per layer on llama3.2 decode — §Perf iter A refinement 3)."""
+        try:
+            am = jax.sharding.get_abstract_mesh()
+            names = tuple(getattr(am, "axis_names", ()) or ())
+        except Exception:
+            return t
+        if "model" not in names or t.shape[axis_spec] % am.shape["model"]:
+            return t
+        from jax.sharding import PartitionSpec as P
+        spec = [None] * t.ndim
+        spec[axis_spec] = "model"
+        dp = tuple(a for a in names if a in ("pod", "data"))
+        dpn = 1
+        for a in dp:
+            dpn *= int(am.shape[a])
+        if dp and t.shape[0] % dpn == 0:
+            spec[0] = dp
+        return jax.lax.with_sharding_constraint(t, P(*spec))
+
+    decode_mode = kv_valid_len is not None
+    if decode_mode:
+        kx = _constrain_seq_sharded(kx, 1)
+        vx = _constrain_seq_sharded(vx, 1)
+
+    def block(qc, qpos):
+        # qc: [B, C, H, hd]; qpos: [C] absolute positions (relative to k[0]).
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                       kx.astype(jnp.float32)) * scale
+        if decode_mode:
+            s = _constrain_seq_sharded(s, 3)
+        mask = jnp.ones((qc.shape[1], sk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        if kv_valid_len is not None:
+            mask &= (kpos[None, :] < kv_valid_len)
+        s = jnp.where(mask[None, None], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", a, vx.astype(jnp.float32)).astype(q.dtype)
+
+    if sq <= q_chunk:
+        return block(q, q_offset + jnp.arange(sq))
+
+    pad = (-sq) % q_chunk
+    if pad:  # e.g. whisper's 1500 encoder frames: pad, compute, slice back
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sq_p = sq + pad
+    n_chunks = sq_p // q_chunk
+    qs = q.reshape(b, n_chunks, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(i, qc):
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        return block(qc, qpos)
+
+    out = jax.lax.map(lambda args: body(*args), (jnp.arange(n_chunks), qs))
+    # v's head dim may differ from q's (MLA: 128 vs 192) — infer from out.
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq_p, h, out.shape[-1])
+    return out[:, :sq] if pad else out
+
+
+def attention_train(p, x, positions, cfg: AttnConfig, q_chunk: int = 512):
+    """Full causal self-attention over a training sequence."""
+    q, k, v = _project_qkv(p, x, cfg)
+    q, k = _rope(q, k, positions, cfg)
+    out = sdpa_chunked(q, k, v, causal=True, window=cfg.window, q_chunk=q_chunk)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ p["w_o"].astype(x.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, S_cache, KV, hd]
+    v: jax.Array
+    pos: jax.Array        # [] int32: tokens decoded so far (absolute)
+
+
+def init_kv_cache(batch: int, cache_len: int, cfg: AttnConfig,
+                  dtype=C.COMPUTE_DTYPE) -> KVCache:
+    shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def attention_decode(p, x, cache: KVCache, cfg: AttnConfig):
+    """One-token decode: append to the KV cache, attend over it.
+
+    With a sliding window the cache is a rolling buffer of ``window`` slots
+    (slot = pos % window) — memory O(window), compute O(window) per token,
+    the sub-quadratic path for long_500k.
+    """
+    b, s, _ = x.shape
+    assert s == 1, "decode processes one new token"
+    q, k, v = _project_qkv(p, x, cfg)
+    pos = cache.pos
+    q, k = _rope(q, k, jnp.full((b, 1), pos), cfg)
+    cache_len = cache.k.shape[1]
+    # Rolling slot: for full-attention caches pos < cache_len so this is pos
+    # itself; for sliding-window caches the buffer wraps (slot = pos % W).
+    slot = pos % cache_len
+    # §Perf iteration A: write the slot with an elementwise masked select
+    # instead of dynamic_update_slice. A traced-index DUS on a
+    # sequence-sharded cache triggers GSPMD "involuntary full
+    # rematerialization" (the whole cache all-gathered per layer per token —
+    # measured 11.2 GB/token on llama3.2 decode); the iota==slot select is
+    # elementwise and keeps every shard local.
+    sel = (jnp.arange(cache_len) == slot)[None, :, None, None]
+    new_k = jnp.where(sel, k.astype(cache.k.dtype), cache.k)
+    new_v = jnp.where(sel, v.astype(cache.v.dtype), cache.v)
+    valid = jnp.minimum(pos + 1, cache_len)
+    out = sdpa_chunked(
+        q, new_k, new_v, causal=False, kv_valid_len=valid, q_offset=pos,
+    )
+    new_cache = KVCache(k=new_k, v=new_v, pos=pos + 1)
+    return out.reshape(b, 1, -1) @ p["w_o"].astype(x.dtype), new_cache
+
+
+def attention_encoder(p, x, cfg: AttnConfig, q_chunk: int = 512):
+    """Bidirectional self-attention (whisper encoder)."""
+    q, k, v = _project_qkv(p, x, cfg)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    q, k = _rope(q, k, pos, cfg)
+    out = sdpa_chunked(q, k, v, causal=False, q_chunk=q_chunk)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ p["w_o"].astype(x.dtype)
+
+
+def cross_attention(p, x, enc_k, enc_v, cfg: AttnConfig):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    b, s, _ = x.shape
+    q = (x @ p["w_q"].astype(x.dtype)).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    out = sdpa_chunked(q, enc_k, enc_v, causal=False)
+    return out.reshape(b, s, -1) @ p["w_o"].astype(x.dtype)

@@ -1,0 +1,112 @@
+"""Shared transformer building blocks (bf16 compute, fp32 params)."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [B, S, H, hd]; positions: [B, S] (absolute)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions_3d: jax.Array,   # [3, B, S] (temporal, height, width)
+    sections: Sequence[int],   # half-dim split, e.g. (16, 24, 24)
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the half-dim frequency bands are split into
+    (t, h, w) sections, each rotated by its own position stream. For pure
+    text the three streams coincide and M-RoPE reduces to RoPE."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)                          # [half]
+    ang_parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        pos = positions_3d[i]                              # [B, S]
+        ang_parts.append(pos[..., None].astype(jnp.float32) * freqs[off:off + sec])
+        off += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)              # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate.astype(x.dtype)) * (x @ w_up.astype(x.dtype))
+    return h @ w_down.astype(x.dtype)
+
+
+def init_swiglu(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(k1, (d_model, d_ff)),
+        "w_up": normal_init(k2, (d_model, d_ff)),
+        "w_down": normal_init(k3, (d_ff, d_model)),
+    }
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(x @ w_in.astype(x.dtype) + b_in.astype(x.dtype))
+    return h @ w_out.astype(x.dtype) + b_out.astype(x.dtype)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": normal_init(k1, (d_model, d_ff)),
+        "b_in": jnp.zeros((d_ff,), jnp.float32),
+        "w_out": normal_init(k2, (d_ff, d_model)),
+        "b_out": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None):
+    """Mean CE over valid tokens. logits [..., V] (any float dtype), labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,165 @@
+"""Mamba-2 (SSD) block — chunked parallel scan for training, O(1)-state decode.
+
+Follows the minimal SSD formulation (Dao & Gu 2024): within a chunk the
+output is an attention-like quadratic form with cumulative decay; across
+chunks a small recurrent state [H, P, N] is carried. ``lax.scan`` over
+chunks keeps the HLO small and the memory bounded — the TPU-native
+recurrent-scan sharding regime the assignment calls out for SSM archs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+class MambaConfig(NamedTuple):
+    d_inner: int        # expansion (usually 2 * d_model)
+    head_dim: int       # P
+    state_dim: int      # N (64 for zamba2)
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba(key, d_model: int, cfg: MambaConfig):
+    ks = jax.random.split(key, 4)
+    h = cfg.num_heads
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.state_dim + h
+    return {
+        "w_in": C.normal_init(ks[0], (d_model, d_in_proj)),
+        "conv_w": C.normal_init(ks[1], (cfg.conv_width, cfg.d_inner + 2 * cfg.state_dim)),
+        "A_log": jnp.zeros((h,), jnp.float32),        # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((cfg.d_inner,), jnp.float32),
+        "w_out": C.normal_init(ks[2], (cfg.d_inner, d_model)),
+    }
+
+
+def _split_proj(p, x, cfg: MambaConfig):
+    zxbcdt = x @ p["w_in"].astype(x.dtype)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [cfg.d_inner, 2 * cfg.d_inner + 2 * cfg.state_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Depthwise causal conv along time. xbc [B, S, C]; conv_w [W, C]."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (w - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)                  # [B, S+W-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+              for i in range(w))
+    new_state = xp[:, -(w - 1):] if w > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, dt, A, B, Cc, cfg: MambaConfig):
+    """SSD over the full sequence via scan over chunks.
+
+    xh [B, S, H, P]; dt [B, S, H] (softplus'd); A [H] (negative);
+    B, Cc [B, S, N] (single group). Returns y [B, S, H, P].
+    """
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    q = min(cfg.chunk, s)
+    while s % q:  # shrink until it divides (shapes here are powers of two)
+        q -= 1
+    nc = s // q
+    dtA = dt * A[None, None, :]                               # [B, S, H] (<= 0)
+
+    def chunk_fn(state, inp):
+        # state: [B, H, P, N]; chunk arrays [B, Q, ...]
+        xc, dtc, dtac, bc, cc = inp
+        # Cumulative decay within chunk: L[t, s_] = exp(sum_{r=s_+1..t} dtA_r)
+        cum = jnp.cumsum(dtac, axis=1)                        # [B, Q, H]
+        # Intra-chunk (attention-like with decay), strictly causal + diagonal.
+        rel = cum[:, :, None, :] - cum[:, None, :, :]         # [B, T, S_, H]
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("btn,bsn->bts", cc, bc)           # [B, T, S_]
+        m = scores[:, :, :, None] * decay                     # [B, T, S_, H]
+        y_intra = jnp.einsum("btsh,bsh,bshp->bthp", m, dtc, xc)
+        # Contribution of the incoming state.
+        state_decay = jnp.exp(cum)                            # [B, Q, H]
+        y_state = jnp.einsum("btn,bhpn,bth->bthp", cc, state, state_decay)
+        # New state: decayed old + chunk contribution.
+        chunk_decay = jnp.exp(cum[:, -1:, :])                 # [B, 1, H]
+        rem = jnp.exp(cum[:, -1:, :] - cum)                   # [B, Q, H]
+        state_new = state * chunk_decay[:, 0, :, None, None] + jnp.einsum(
+            "bsh,bsh,bshp,bsn->bhpn", rem, dtc, xc, bc)
+        return state_new, y_intra + y_state
+
+    xs = (
+        xh.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4),
+        dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3),
+        dtA.reshape(b, nc, q, h).transpose(1, 0, 2, 3),
+        B.reshape(b, nc, q, n).transpose(1, 0, 2, 3),
+        Cc.reshape(b, nc, q, n).transpose(1, 0, 2, 3),
+    )
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_fn, state0, xs)
+    return ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+
+
+def mamba_train(p, x, cfg: MambaConfig):
+    """Full-sequence Mamba-2 mixing. x [B, S, D] -> [B, S, D]."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"])
+    xh, B, Cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + cfg.state_dim], axis=-1)
+    xh = xh.reshape(b, s, h, cfg.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y = _ssd_chunked(xh, dt, A, B.astype(jnp.float32), Cc.astype(jnp.float32), cfg)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = C.rms_norm(y * jax.nn.silu(z), p["norm_scale"])       # gated norm
+    return y @ p["w_out"].astype(x.dtype)
+
+
+class MambaCache(NamedTuple):
+    state: jax.Array       # [B, H, P, N]
+    conv_state: jax.Array  # [B, W-1, d_inner + 2N]
+
+
+def init_mamba_cache(batch: int, cfg: MambaConfig, dtype=jnp.float32) -> MambaCache:
+    return MambaCache(
+        state=jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.state_dim), jnp.float32),
+        conv_state=jnp.zeros((batch, cfg.conv_width - 1,
+                              cfg.d_inner + 2 * cfg.state_dim), dtype),
+    )
+
+
+def mamba_decode(p, x, cache: MambaCache, cfg: MambaConfig):
+    """One-token recurrent step: h' = exp(dt*A) h + dt * B xᵀ; y = C·h + D x."""
+    b, s, _ = x.shape
+    assert s == 1
+    h = cfg.num_heads
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], cache.conv_state)
+    xh, B, Cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + cfg.state_dim], axis=-1)
+    xh = xh.reshape(b, h, cfg.head_dim).astype(jnp.float32)           # [B, H, P]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                                   # [B, H]
+    Bv = B[:, 0].astype(jnp.float32)                                   # [B, N]
+    Cv = Cc[:, 0].astype(jnp.float32)
+    state = cache.state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bv)
+    y = jnp.einsum("bn,bhpn->bhp", Cv, state) + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = C.rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["w_out"].astype(x.dtype), MambaCache(state=state, conv_state=conv_state)

@@ -1,0 +1,118 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a shared latent ``c_kv`` (rank ``kv_lora``) plus a
+decoupled RoPE key; the KV cache stores only ``[c_kv | k_pe]`` per token —
+the memory win that defines MLA. Decode uses the *absorbed* formulation
+(queries projected into latent space, attention output up-projected once),
+which avoids re-expanding the cache every step.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+class MLAConfig(NamedTuple):
+    num_heads: int
+    head_dim: int          # nope (content) head dim
+    rope_dim: int          # decoupled rope dim (shared across heads)
+    kv_lora: int           # latent rank (512 for v2-lite)
+    v_head_dim: int
+    rope_theta: float = 10000.0
+
+
+def init_mla(key, d_model: int, cfg: MLAConfig):
+    ks = jax.random.split(key, 6)
+    h = cfg.num_heads
+    return {
+        "w_q": C.normal_init(ks[0], (d_model, h * (cfg.head_dim + cfg.rope_dim))),
+        "w_dkv": C.normal_init(ks[1], (d_model, cfg.kv_lora)),      # down-proj
+        "w_kpe": C.normal_init(ks[2], (d_model, cfg.rope_dim)),     # decoupled key
+        "w_uk": C.normal_init(ks[3], (cfg.kv_lora, h * cfg.head_dim)),
+        "w_uv": C.normal_init(ks[4], (cfg.kv_lora, h * cfg.v_head_dim)),
+        "w_o": C.normal_init(ks[5], (h * cfg.v_head_dim, d_model)),
+    }
+
+
+def _split_q(p, x, cfg: MLAConfig):
+    b, s, _ = x.shape
+    q = (x @ p["w_q"].astype(x.dtype)).reshape(b, s, cfg.num_heads,
+                                               cfg.head_dim + cfg.rope_dim)
+    return q[..., :cfg.head_dim], q[..., cfg.head_dim:]
+
+
+def mla_train(p, x, positions, cfg: MLAConfig, q_chunk: int = 512):
+    """Training path: expand latent to per-head K/V, chunked causal SDPA."""
+    b, s, _ = x.shape
+    q_nope, q_pe = _split_q(p, x, cfg)
+    c_kv = x @ p["w_dkv"].astype(x.dtype)                       # [B, S, L]
+    k_pe = (x @ p["w_kpe"].astype(x.dtype))[:, :, None, :]      # [B, S, 1, r]
+    q_pe = C.apply_rope(q_pe, positions, cfg.rope_theta)
+    k_pe = C.apply_rope(k_pe, positions, cfg.rope_theta)
+    k_nope = (c_kv @ p["w_uk"].astype(x.dtype)).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    v = (c_kv @ p["w_uv"].astype(x.dtype)).reshape(b, s, cfg.num_heads, cfg.v_head_dim)
+    # Concatenate content + rope parts; the rope key is shared across heads.
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, k_nope[..., :cfg.rope_dim].shape)],
+                        axis=-1)
+    from repro.models.attention import sdpa_chunked
+    out = sdpa_chunked(q, k, v, causal=True, q_chunk=q_chunk)
+    return out.reshape(b, s, -1) @ p["w_o"].astype(x.dtype)
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array   # [B, S, kv_lora]
+    k_pe: jax.Array   # [B, S, rope_dim]
+    pos: jax.Array
+
+
+def init_mla_cache(batch: int, cache_len: int, cfg: MLAConfig,
+                   dtype=C.COMPUTE_DTYPE) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, cache_len, cfg.kv_lora), dtype),
+        k_pe=jnp.zeros((batch, cache_len, cfg.rope_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(p, x, cache: MLACache, cfg: MLAConfig):
+    """Absorbed decode: attend in the latent space (cache never expanded)."""
+    b, s, _ = x.shape
+    assert s == 1
+    h = cfg.num_heads
+    q_nope, q_pe = _split_q(p, x, cfg)                      # [B,1,H,hd],[B,1,H,r]
+    pos = cache.pos
+    q_pe = C.apply_rope(q_pe, jnp.full((b, 1), pos), cfg.rope_theta)
+    c_new = x @ p["w_dkv"].astype(x.dtype)                  # [B, 1, L]
+    k_pe_new = C.apply_rope((x @ p["w_kpe"].astype(x.dtype))[:, :, None, :],
+                            jnp.full((b, 1), pos), cfg.rope_theta)[:, :, 0, :]
+    cache_len = cache.c_kv.shape[1]
+    slot = pos % cache_len
+    # Elementwise masked write — keeps a sequence-sharded latent cache local
+    # (see attention.attention_decode, §Perf iteration A).
+    sel = (jnp.arange(cache_len) == slot)[None, :, None]
+    c_kv = jnp.where(sel, c_new.astype(cache.c_kv.dtype), cache.c_kv)
+    k_pe = jnp.where(sel, k_pe_new.astype(cache.k_pe.dtype), cache.k_pe)
+    # Absorb W_uk into the query: q_lat[h] = W_uk[h]^T q_nope[h]  ∈ R^L.
+    w_uk = p["w_uk"].astype(x.dtype).reshape(cfg.kv_lora, h, cfg.head_dim)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk)      # [B,1,H,L]
+    scale = 1.0 / jnp.sqrt(cfg.head_dim + cfg.rope_dim)
+    s_lat = jnp.einsum("bqhl,bsl->bhqs", q_lat.astype(jnp.float32),
+                       c_kv.astype(jnp.float32))
+    s_pe = jnp.einsum("bqhr,bsr->bhqs", q_pe.astype(jnp.float32),
+                      k_pe.astype(jnp.float32))
+    scores = (s_lat + s_pe) * scale
+    valid = jnp.arange(cache_len)[None, None, None, :] < jnp.minimum(pos + 1, cache_len)
+    scores = jnp.where(valid, scores, -1e30)
+    a = jax.nn.softmax(scores, axis=-1)
+    # Attend in latent space, then up-project through W_uv once.
+    ctx = jnp.einsum("bhqs,bsl->bqhl", a, c_kv.astype(jnp.float32))  # [B,1,H,L]
+    w_uv = p["w_uv"].astype(x.dtype).reshape(cfg.kv_lora, h, cfg.v_head_dim)
+    out = jnp.einsum("bqhl,lhd->bqhd", ctx.astype(x.dtype), w_uv)
+    out = out.reshape(b, 1, -1) @ p["w_o"].astype(x.dtype)
+    return out, MLACache(c_kv=c_kv, k_pe=k_pe, pos=pos + 1)

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity.
+
+Dispatch/combine are built from gather/scatter with a static per-expert
+capacity (XLA-friendly; over-capacity tokens drop to the shared/residual
+path, standard on TPUs). Experts run as one grouped GEMM
+(``einsum('ecd,edf->ecf')``) so the MXU sees dense work; with experts
+sharded over the ``model`` axis this becomes expert parallelism and the
+dispatch scatter lowers to an all-to-all — the transfer the paper's
+quantized-communication scheme attaches to (DESIGN.md §5).
+
+Supports DeepSeek-style shared experts (always-on dense SwiGLU) and the
+switch-style load-balance auxiliary loss.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+class MoEConfig(NamedTuple):
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0           # shared (always-active) experts
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig):
+    ks = jax.random.split(key, 5)
+    e, f = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": C.normal_init(ks[0], (d_model, e), scale=0.006),
+        "w_gate": C.normal_init(ks[1], (e, d_model, f)),
+        "w_up": C.normal_init(ks[2], (e, d_model, f)),
+        "w_down": C.normal_init(ks[3], (e, f, d_model)),
+    }
+    if cfg.num_shared:
+        p["shared"] = C.init_swiglu(ks[4], d_model, cfg.num_shared * f)
+    return p
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    cap = int(tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(8, -(-cap // 8) * 8)  # round up to 8 (sublane alignment)
+
+
+def moe_ffn(p, x: jax.Array, cfg: MoEConfig):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.num_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, k)                               # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)      # renormalize
+
+    # Position of each (token, k) within its expert's capacity buffer.
+    counts = jnp.zeros((e,), jnp.int32)
+    pos_list = []
+    for kk in range(k):  # K is small and static
+        ek = sel[:, kk]
+        oh = jax.nn.one_hot(ek, e, dtype=jnp.int32)                   # [T, E]
+        pos_in = jnp.cumsum(oh, axis=0) - 1 + counts[None, :]
+        pos_list.append(jnp.take_along_axis(pos_in, ek[:, None], axis=1)[:, 0])
+        counts = counts + oh.sum(axis=0)
+    pos = jnp.stack(pos_list, axis=1)                                 # [T, K]
+    valid = pos < cap
+
+    # Dispatch: scatter tokens into [E*cap (+1 overflow row), D].
+    flat_dst = jnp.where(valid, sel * cap + pos, e * cap)
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    src = jnp.broadcast_to(xt[:, None, :], (t, k, d)).reshape(t * k, d)
+    buf = buf.at[flat_dst.reshape(-1)].add(jnp.where(valid.reshape(-1, 1), src, 0))
+    ex_in = buf[: e * cap].reshape(e, cap, d)
+
+    # Grouped expert SwiGLU (one einsum per projection — dense MXU work).
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex_in, p["w_gate"].astype(xt.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", ex_in, p["w_up"].astype(xt.dtype))
+    ex_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(xt.dtype))
+
+    # Combine: gather expert outputs back and mix with renormalized gates.
+    flat = jnp.concatenate([ex_out.reshape(e * cap, d),
+                            jnp.zeros((1, d), xt.dtype)], axis=0)
+    got = flat[flat_dst.reshape(-1)].reshape(t, k, d)
+    out = jnp.einsum("tk,tkd->td", gate.astype(xt.dtype), got)
+
+    if cfg.num_shared:
+        out = out + C.swiglu(xt, **{k_: p["shared"][k_] for k_ in
+                                    ("w_gate", "w_up", "w_down")})
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e.
+    f_e = jnp.zeros((e,), jnp.float32).at[sel.reshape(-1)].add(
+        valid.reshape(-1).astype(jnp.float32)) / jnp.maximum(t * k, 1)
+    p_e = probs.mean(axis=0)
+    aux = cfg.aux_loss_coef * e * jnp.sum(f_e * p_e)
+    return out.reshape(b, s, d), aux

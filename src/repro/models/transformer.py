@@ -1,0 +1,524 @@
+"""Architecture-generic LM: config, init, train_step, serve_step.
+
+One config dataclass covers the six assigned families (dense, moe, hybrid,
+ssm, vlm, audio). Layer stacks are ``lax.scan`` over stacked params with
+``jax.checkpoint`` on each block (small HLO, bounded activation memory);
+micro-batched gradient accumulation bounds per-step activations for the
+production shapes (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models import attention as A
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import mamba2 as MB
+from repro.models import xlstm as XL
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    window: Optional[int] = None   # sliding-window attention (long_500k variant)
+    mrope_sections: Optional[Tuple[int, ...]] = None   # vlm
+    vision_patches: int = 256      # vlm stub: prefix patch embeddings
+    # moe
+    moe: Optional[MOE.MoEConfig] = None
+    # mla (deepseek)
+    mla: Optional[MLA.MLAConfig] = None
+    # ssm / hybrid
+    mamba: Optional[MB.MambaConfig] = None
+    attn_every: int = 0            # hybrid: shared attn block every k layers
+    # xlstm: layers grouped as (group_size-1) mLSTM + 1 sLSTM
+    xlstm: Optional[XL.XLSTMConfig] = None
+    xlstm_group: int = 4
+    # audio (whisper)
+    enc_layers: int = 0
+    enc_frames: int = 1500
+    # runtime knobs
+    q_chunk: int = 512
+    source: str = ""               # citation for the config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def attn_cfg(self, window: Optional[int] = None) -> A.AttnConfig:
+        return A.AttnConfig(
+            num_heads=self.num_heads, num_kv_heads=self.num_kv_heads,
+            head_dim=self.hd, qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+            window=window if window is not None else self.window,
+            mrope_sections=self.mrope_sections,
+        )
+
+    def param_count(self) -> int:
+        import numpy as np
+        shapes = jax.eval_shape(lambda k: init_params(k, self), jax.random.PRNGKey(0))
+        return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(shapes))
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def _init_dense_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": A.init_attention(k1, cfg.d_model, cfg.attn_cfg()),
+    }
+    if cfg.moe is not None:
+        p["moe"] = MOE.init_moe(k2, cfg.d_model, cfg.moe)
+    else:
+        p["mlp"] = C.init_swiglu(k2, cfg.d_model, cfg.d_ff)
+    if cfg.mla is not None:
+        p["attn"] = MLA.init_mla(k1, cfg.d_model, cfg.mla)
+    return p
+
+
+def _dense_block_train(p, h, positions, cfg: ArchConfig, window=None):
+    hn = C.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    if cfg.mla is not None:
+        h = h + MLA.mla_train(p["attn"], hn, positions, cfg.mla, cfg.q_chunk)
+    else:
+        h = h + A.attention_train(p["attn"], hn, positions,
+                                  cfg.attn_cfg(window), cfg.q_chunk)
+    hn = C.rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        out, aux = MOE.moe_ffn(p["moe"], hn, cfg.moe)
+        h = h + out
+    else:
+        h = h + C.swiglu(hn, **p["mlp"])
+    return h, aux
+
+
+def _dense_block_decode(p, h, cache, cfg: ArchConfig, window=None):
+    hn = C.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    if cfg.mla is not None:
+        out, cache = MLA.mla_decode(p["attn"], hn, cache, cfg.mla)
+    else:
+        out, cache = A.attention_decode(p["attn"], hn, cache, cfg.attn_cfg(window))
+    h = h + out
+    hn = C.rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        out, _ = MOE.moe_ffn(p["moe"], hn, cfg.moe)
+        h = h + out
+    else:
+        h = h + C.swiglu(hn, **p["mlp"])
+    return h, cache
+
+
+def _init_mamba_block(key, cfg: ArchConfig):
+    return {
+        "norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "mamba": MB.init_mamba(key, cfg.d_model, cfg.mamba),
+    }
+
+
+def _init_xlstm_group(key, cfg: ArchConfig):
+    ks = jax.random.split(key, cfg.xlstm_group)
+    return {
+        "mlstm": jax.vmap(lambda k: XL.init_mlstm_block(k, cfg.xlstm))(
+            ks[: cfg.xlstm_group - 1]),
+        "slstm": XL.init_slstm_block(ks[-1], cfg.xlstm),
+    }
+
+
+# ------------------------------------------------------------------ params
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": C.normal_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = C.normal_init(ks[1], (cfg.d_model, cfg.vocab_size))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        lkeys = jax.random.split(ks[2], cfg.num_layers)
+        p["blocks"] = jax.vmap(lambda k: _init_dense_block(k, cfg))(lkeys)
+    elif cfg.family == "hybrid":
+        lkeys = jax.random.split(ks[2], cfg.num_layers)
+        p["blocks"] = jax.vmap(lambda k: _init_mamba_block(k, cfg))(lkeys)
+        p["shared_attn"] = _init_dense_block(ks[3], dataclasses.replace(cfg, moe=None))
+    elif cfg.family == "ssm":
+        ngroups = cfg.num_layers // cfg.xlstm_group
+        gkeys = jax.random.split(ks[2], ngroups)
+        p["blocks"] = jax.vmap(lambda k: _init_xlstm_group(k, cfg))(gkeys)
+    elif cfg.family == "audio":
+        lkeys = jax.random.split(ks[2], cfg.num_layers)
+        p["blocks"] = jax.vmap(lambda k: _init_whisper_dec_block(k, cfg))(lkeys)
+        ekeys = jax.random.split(ks[3], cfg.enc_layers)
+        p["enc_blocks"] = jax.vmap(lambda k: _init_whisper_enc_block(k, cfg))(ekeys)
+        p["enc_pos"] = C.normal_init(ks[4], (cfg.enc_frames, cfg.d_model))
+        p["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        # Vision-projector stub output dimension check happens in input_specs;
+        # the projector itself is part of the stubbed frontend.
+        pass
+    return p
+
+
+def _init_whisper_enc_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn_norm_bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp_norm_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp_norm_bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": A.init_attention(k1, cfg.d_model, cfg.attn_cfg()),
+        "mlp": C.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_whisper_dec_block(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "self_norm_bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        "cross_norm_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "cross_norm_bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp_norm_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp_norm_bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        "self_attn": A.init_attention(k1, cfg.d_model, cfg.attn_cfg()),
+        "cross_attn": A.init_attention(k2, cfg.d_model, cfg.attn_cfg()),
+        "mlp": C.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _constrain_bsd(h: jax.Array) -> jax.Array:
+    """Pin the residual stream [B, S, D] to (batch->data, D replicated).
+
+    NOTE (§Perf iter D): applying this right after the d_model-sharded
+    embedding lookup trips a GSPMD verifier bug on the train path
+    ("Slice dim size 2048 greater than dynamic slice dimension: 128"),
+    so it is currently unused; kept for future placement experiments.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        names = tuple(getattr(am, "axis_names", ()) or ())
+    except Exception:
+        return h
+    if not names or "model" not in names:
+        return h
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    dpn = 1
+    for a in dp:
+        dpn *= int(am.shape[a])
+    bspec = dp if (dp and h.shape[0] % dpn == 0) else None
+    return jax.lax.with_sharding_constraint(h, P(bspec, None, None))
+
+
+def _vlm_positions(batch: int, seq: int, n_patches: int, grid: int = 16):
+    """M-RoPE 3D positions: patch prefix gets a (t=0, h, w) grid, text
+    continues temporally after the vision span."""
+    idx = jnp.arange(seq)
+    is_patch = idx < n_patches
+    t = jnp.where(is_patch, 0, idx - n_patches + 1)
+    h = jnp.where(is_patch, idx // grid, idx - n_patches + 1)
+    w = jnp.where(is_patch, idx % grid, idx - n_patches + 1)
+    pos = jnp.stack([t, h, w])                       # [3, S]
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+def forward_train(params, cfg: ArchConfig, tokens: jax.Array,
+                  extra: Optional[Dict[str, jax.Array]] = None,
+                  window: Optional[int] = None):
+    """tokens [B, S] -> logits [B, S, V] (bf16 compute), plus moe aux loss."""
+    b, s = tokens.shape
+    h = params["embed"][tokens].astype(C.COMPUTE_DTYPE)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "vlm" and extra is not None and "patches" in extra:
+        npatch = extra["patches"].shape[1]
+        h = jnp.concatenate(
+            [extra["patches"].astype(h.dtype), h[:, npatch:]], axis=1)
+        positions = _vlm_positions(b, s, npatch)
+    elif cfg.mrope_sections is not None:
+        positions = _vlm_positions(b, s, 0)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, p_l):
+            hh, aux = carry
+            hh, a = jax.checkpoint(
+                lambda pp, xx: _dense_block_train(pp, xx, positions, cfg, window)
+            )(p_l, hh)
+            return (hh, aux + a), None
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), params["blocks"])
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        k_every = cfg.attn_every
+
+        def body(carry, inp):
+            hh, aux = carry
+            i, p_l = inp
+            hh = hh + jax.checkpoint(
+                lambda pp, xx: MB.mamba_train(
+                    pp["mamba"], C.rms_norm(xx, pp["norm"], cfg.norm_eps), cfg.mamba)
+            )(p_l, hh)
+            def with_attn(xx):
+                out, _ = _dense_block_train(shared, xx, positions, cfg, window)
+                return out
+            hh = jax.lax.cond((i % k_every) == k_every - 1, with_attn,
+                              lambda xx: xx, hh)
+            return (hh, aux), None
+        idx = jnp.arange(cfg.num_layers)
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total),
+                                         (idx, params["blocks"]))
+    elif cfg.family == "ssm":
+        def body(hh, p_g):
+            def group(pg, xx):
+                for j in range(cfg.xlstm_group - 1):
+                    pm = jax.tree_util.tree_map(lambda a: a[j], pg["mlstm"])
+                    xx = XL.mlstm_block_train(pm, xx, cfg.xlstm)
+                return XL.slstm_block_train(pg["slstm"], xx, cfg.xlstm)
+            return jax.checkpoint(group)(p_g, hh), None
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+    elif cfg.family == "audio":
+        enc = extra["frames"].astype(C.COMPUTE_DTYPE) + params["enc_pos"][None].astype(C.COMPUTE_DTYPE)
+
+        def enc_body(hh, p_l):
+            def blk(pp, xx):
+                xn = C.layer_norm(xx, pp["attn_norm_scale"], pp["attn_norm_bias"])
+                xx = xx + A.attention_encoder(pp["attn"], xn, cfg.attn_cfg(), cfg.q_chunk)
+                xn = C.layer_norm(xx, pp["mlp_norm_scale"], pp["mlp_norm_bias"])
+                return xx + C.gelu_mlp(xn, **pp["mlp"])
+            return jax.checkpoint(blk)(p_l, hh), None
+        enc, _ = jax.lax.scan(enc_body, enc, params["enc_blocks"])
+        enc = C.rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+        acfg = cfg.attn_cfg()
+        def dec_body(hh, p_l):
+            def blk(pp, xx):
+                xn = C.layer_norm(xx, pp["self_norm_scale"], pp["self_norm_bias"])
+                xx = xx + A.attention_train(pp["self_attn"], xn, positions, acfg, cfg.q_chunk)
+                xn = C.layer_norm(xx, pp["cross_norm_scale"], pp["cross_norm_bias"])
+                ek = (enc @ pp["cross_attn"]["w_k"].astype(enc.dtype)).reshape(
+                    b, -1, cfg.num_kv_heads, cfg.hd)
+                ev = (enc @ pp["cross_attn"]["w_v"].astype(enc.dtype)).reshape(
+                    b, -1, cfg.num_kv_heads, cfg.hd)
+                xx = xx + A.cross_attention(pp["cross_attn"], xn, ek, ev, acfg)
+                xn = C.layer_norm(xx, pp["mlp_norm_scale"], pp["mlp_norm_bias"])
+                return xx + C.gelu_mlp(xn, **pp["mlp"])
+            return jax.checkpoint(blk)(p_l, hh), None
+        h, _ = jax.lax.scan(dec_body, h, params["blocks"])
+    else:
+        raise ValueError(cfg.family)
+
+    h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    return logits, aux_total
+
+
+# -------------------------------------------------------------- train step
+
+
+def compute_loss(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+                 window: Optional[int] = None):
+    tokens = batch["tokens"]
+    extra = {k: v for k, v in batch.items() if k not in ("tokens", "loss_mask")}
+    logits, aux = forward_train(params, cfg, tokens, extra or None, window)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(tokens, jnp.float32)
+    mask = mask.at[:, -1].set(0.0)  # no target for the final position
+    return C.cross_entropy(logits, labels, mask) + aux
+
+
+def train_step(params, opt_state, batch, cfg: ArchConfig, *,
+               lr: float = 3e-4, num_microbatches: int = 1,
+               window: Optional[int] = None):
+    """One optimizer step with optional gradient accumulation."""
+    from repro.optim import adamw_update
+
+    if num_microbatches <= 1:
+        loss, grads = jax.value_and_grad(compute_loss)(params, cfg, batch, window)
+    else:
+        nm = num_microbatches
+        def reshape(x):
+            return x.reshape((nm, x.shape[0] // nm) + x.shape[1:])
+        mbs = jax.tree_util.tree_map(reshape, batch)
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            loss_acc, g_acc = acc
+            l, g = jax.value_and_grad(compute_loss)(params, cfg, mb, window)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b2: a + b2.astype(jnp.float32) / nm, g_acc, g)
+            return (loss_acc + l / nm, g_acc), None
+
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero), mbs)
+    new_params, new_opt = adamw_update(grads, opt_state, params, lr, grad_clip=1.0)
+    return new_params, new_opt, loss
+
+
+# -------------------------------------------------------------- serve step
+
+
+class ServeCache(NamedTuple):
+    layers: Any          # family-specific stacked cache pytree
+    extra: Any           # e.g. hybrid shared-attn caches, audio cross K/V
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               window: Optional[int] = None) -> ServeCache:
+    """Cache for one-token decode with ``cache_len`` context."""
+    eff_len = min(cache_len, window) if window else cache_len
+    acfg = cfg.attn_cfg(window)
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.mla is not None:
+            one = MLA.init_mla_cache(batch, cache_len, cfg.mla)
+        else:
+            one = A.init_kv_cache(batch, eff_len, acfg)
+        layers = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+        return ServeCache(layers=layers, extra=None)
+    if cfg.family == "hybrid":
+        one = MB.init_mamba_cache(batch, cfg.mamba)
+        layers = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+        n_apps = cfg.num_layers // cfg.attn_every
+        attn_one = A.init_kv_cache(batch, eff_len, acfg)
+        attn = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_apps,) + x.shape).copy(), attn_one)
+        return ServeCache(layers=layers, extra=attn)
+    if cfg.family == "ssm":
+        ngroups = cfg.num_layers // cfg.xlstm_group
+        mone = XL.init_mlstm_cache(batch, cfg.xlstm)
+        mstack = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x, (ngroups, cfg.xlstm_group - 1) + x.shape).copy(), mone)
+        sone = XL.init_slstm_cache(batch, cfg.xlstm)
+        sstack = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (ngroups,) + x.shape).copy(), sone)
+        return ServeCache(layers={"mlstm": mstack, "slstm": sstack}, extra=None)
+    if cfg.family == "audio":
+        one = A.init_kv_cache(batch, eff_len, acfg)
+        layers = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape).copy(), one)
+        cross = {
+            "k": jnp.zeros((cfg.num_layers, batch, cfg.enc_frames,
+                            cfg.num_kv_heads, cfg.hd), C.COMPUTE_DTYPE),
+            "v": jnp.zeros((cfg.num_layers, batch, cfg.enc_frames,
+                            cfg.num_kv_heads, cfg.hd), C.COMPUTE_DTYPE),
+        }
+        return ServeCache(layers=layers, extra=cross)
+    raise ValueError(cfg.family)
+
+
+def serve_step(params, cache: ServeCache, tokens: jax.Array, cfg: ArchConfig,
+               window: Optional[int] = None):
+    """Decode ONE token. tokens [B, 1] -> (logits [B, 1, V], new cache)."""
+    b = tokens.shape[0]
+    h = params["embed"][tokens].astype(C.COMPUTE_DTYPE)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(hh, inp):
+            p_l, c_l = inp
+            hh, c_l = _dense_block_decode(p_l, hh, c_l, cfg, window)
+            return hh, c_l
+        h, layers = jax.lax.scan(body, h, (params["blocks"], cache.layers))
+        cache = ServeCache(layers=layers, extra=None)
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        k_every = cfg.attn_every
+
+        def body(carry, inp):
+            hh, attn_caches = carry
+            i, p_l, c_l = inp
+            hn = C.rms_norm(hh, p_l["norm"], cfg.norm_eps)
+            out, c_l = MB.mamba_decode(p_l["mamba"], hn, c_l, cfg.mamba)
+            hh = hh + out
+            app = i // k_every
+            c_app = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, app, 0, keepdims=False),
+                attn_caches)
+
+            def with_attn(args):
+                xx, ca = args
+                xx, ca = _dense_block_decode(shared, xx, ca, cfg, window)
+                return xx, ca
+
+            hh, c_app = jax.lax.cond((i % k_every) == k_every - 1, with_attn,
+                                     lambda args: args, (hh, c_app))
+            attn_caches = jax.tree_util.tree_map(
+                lambda c, u: jax.lax.dynamic_update_index_in_dim(c, u, app, 0),
+                attn_caches, c_app)
+            return (hh, attn_caches), c_l
+
+        idx = jnp.arange(cfg.num_layers)
+        (h, attn_caches), layers = jax.lax.scan(
+            body, (h, cache.extra), (idx, params["blocks"], cache.layers))
+        cache = ServeCache(layers=layers, extra=attn_caches)
+    elif cfg.family == "ssm":
+        def body(hh, inp):
+            p_g, mc, sc = inp
+            for j in range(cfg.xlstm_group - 1):
+                pm = jax.tree_util.tree_map(lambda a: a[j], p_g["mlstm"])
+                cj = jax.tree_util.tree_map(lambda a: a[j], mc)
+                hh, cj = XL.mlstm_block_decode(pm, hh, cj, cfg.xlstm)
+                mc = jax.tree_util.tree_map(
+                    lambda a, u: a.at[j].set(u), mc, cj)
+            hh, sc = XL.slstm_block_decode(p_g["slstm"], hh, sc, cfg.xlstm)
+            return hh, (mc, sc)
+        h, (mst, sst) = jax.lax.scan(
+            body, h, (params["blocks"], cache.layers["mlstm"], cache.layers["slstm"]))
+        cache = ServeCache(layers={"mlstm": mst, "slstm": sst}, extra=None)
+    elif cfg.family == "audio":
+        acfg = cfg.attn_cfg(window)
+        cross = cache.extra
+
+        def body(hh, inp):
+            p_l, c_l, ck, cv = inp
+            xn = C.layer_norm(hh, p_l["self_norm_scale"], p_l["self_norm_bias"])
+            out, c_l = A.attention_decode(p_l["self_attn"], xn, c_l, acfg)
+            hh = hh + out
+            xn = C.layer_norm(hh, p_l["cross_norm_scale"], p_l["cross_norm_bias"])
+            hh = hh + A.cross_attention(p_l["cross_attn"], xn, ck, cv, acfg)
+            xn = C.layer_norm(hh, p_l["mlp_norm_scale"], p_l["mlp_norm_bias"])
+            hh = hh + C.gelu_mlp(xn, **p_l["mlp"])
+            return hh, c_l
+        h, layers = jax.lax.scan(
+            body, h, (params["blocks"], cache.layers, cross["k"], cross["v"]))
+        cache = ServeCache(layers=layers, extra=cross)
+    else:
+        raise ValueError(cfg.family)
+
+    h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head.astype(h.dtype)
+    return logits, cache

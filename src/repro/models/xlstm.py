@@ -1,0 +1,275 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallel train
+form) and sLSTM (scalar memory, true recurrence).
+
+* mLSTM trains with the chunk-parallel attention-like formulation
+  (exponential-gate decay matrix D, stabilized), mathematically equivalent
+  to the recurrent form used for decode — O(1) state per token.
+* sLSTM has a recurrent connection R (block-diagonal per head) so it is
+  inherently sequential: trained with a two-level ``lax.scan`` (outer
+  chunks carry state, inner steps under ``jax.checkpoint`` for memory).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+
+
+class XLSTMConfig(NamedTuple):
+    d_model: int
+    num_heads: int
+    conv_width: int = 4
+    q_chunk: int = 256
+    slstm_chunk: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+# ----------------------------------------------------------------- mLSTM --
+
+
+def init_mlstm_block(key, cfg: XLSTMConfig):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    dm = 2 * d  # up-projection factor 2
+    h = cfg.num_heads
+    p = cfg.head_dim * 2  # inner head dim after up-proj
+    return {
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        "w_up": C.normal_init(ks[0], (d, 2 * dm)),          # [u | gate]
+        "conv_w": C.normal_init(ks[1], (cfg.conv_width, dm)),
+        "w_q": C.normal_init(ks[2], (dm, dm)),
+        "w_k": C.normal_init(ks[3], (dm, dm)),
+        "w_v": C.normal_init(ks[4], (dm, dm)),
+        "w_if": C.normal_init(ks[5], (dm, 2 * h)),          # i/f gate pre-acts
+        "gn_scale": jnp.ones((dm,), jnp.float32),
+        "w_down": C.normal_init(ks[6], (dm, d)),
+    }
+
+
+def _mlstm_parallel(q, k, v, ilog, flog, q_chunk: int):
+    """Stabilized parallel mLSTM. q,k,v [B,S,H,P]; ilog,flog [B,S,H]."""
+    b, s, h, p = q.shape
+    scale = 1.0 / jnp.sqrt(p)
+    F = jnp.cumsum(flog, axis=1)                       # [B, S, H]
+    # D_ts = exp(F_t - F_s + i_s - m_t), s <= t
+    src = (ilog - F)                                   # [B, S, H] (log i_s - F_s)
+
+    def block(qc, tpos):
+        Ft = jnp.take_along_axis(F, tpos[None, :, None].repeat(b, 0), axis=1)  # [B,C,H]
+        logd = Ft[:, :, None, :] + src[:, None, :, :]  # [B, C, S, H]
+        causal = tpos[:, None] >= jnp.arange(s)[None, :]
+        logd = jnp.where(causal[None, :, :, None], logd, -jnp.inf)
+        m = jnp.max(logd, axis=2, keepdims=True)       # [B, C, 1, H]
+        m = jnp.maximum(m, -30.0)
+        d_mat = jnp.exp(logd - m)
+        scores = jnp.einsum("bchp,bshp->bcsh", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        cmat = scores * d_mat
+        denom = jnp.maximum(jnp.abs(cmat.sum(axis=2)), jnp.exp(-m[:, :, 0, :]))
+        out = jnp.einsum("bcsh,bshp->bchp", cmat, v.astype(jnp.float32))
+        return (out / denom[..., None]).astype(q.dtype)
+
+    if s <= q_chunk:
+        return block(q, jnp.arange(s))
+    nc = s // q_chunk
+    qs = q.reshape(b, nc, q_chunk, h, p).transpose(1, 0, 2, 3, 4)
+    outs = jax.lax.map(
+        lambda args: block(args[1], args[0] * q_chunk + jnp.arange(q_chunk)),
+        (jnp.arange(nc), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+
+
+def mlstm_block_train(p, x, cfg: XLSTMConfig):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    res = x
+    xn = C.rms_norm(x, p["ln_scale"])
+    up = xn @ p["w_up"].astype(x.dtype)
+    u, gate = jnp.split(up, 2, axis=-1)                 # [B, S, 2d] each
+    cu, _ = _conv_silu(u, p["conv_w"])
+    q = (cu @ p["w_q"].astype(x.dtype)).reshape(b, s, h, -1)
+    k = (cu @ p["w_k"].astype(x.dtype)).reshape(b, s, h, -1)
+    v = (u @ p["w_v"].astype(x.dtype)).reshape(b, s, h, -1)
+    if_pre = (cu @ p["w_if"].astype(x.dtype)).astype(jnp.float32)
+    ilog, fpre = if_pre[..., :h], if_pre[..., h:]
+    flog = jax.nn.log_sigmoid(fpre)
+    y = _mlstm_parallel(q, k, v, ilog, flog, cfg.q_chunk)
+    y = y.reshape(b, s, -1)
+    y = C.rms_norm(y, p["gn_scale"]) * jax.nn.silu(gate)
+    return res + y @ p["w_down"].astype(x.dtype)
+
+
+def _conv_silu(u, conv_w, state=None):
+    w = conv_w.shape[0]
+    pad = (jnp.zeros(u.shape[:1] + (w - 1,) + u.shape[2:], u.dtype)
+           if state is None else state)
+    xp = jnp.concatenate([pad, u], axis=1)
+    out = sum(xp[:, i:i + u.shape[1]] * conv_w[i].astype(u.dtype) for i in range(w))
+    return jax.nn.silu(out), xp[:, -(w - 1):]
+
+
+class MLSTMCache(NamedTuple):
+    Cm: jax.Array   # [B, H, P, P] matrix memory
+    n: jax.Array    # [B, H, P]
+    m: jax.Array    # [B, H]
+    conv: jax.Array
+
+
+def init_mlstm_cache(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> MLSTMCache:
+    h, pdim = cfg.num_heads, cfg.head_dim * 2
+    return MLSTMCache(
+        Cm=jnp.zeros((batch, h, pdim, pdim), jnp.float32),
+        n=jnp.zeros((batch, h, pdim), jnp.float32),
+        m=jnp.full((batch, h), -30.0, jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, 2 * cfg.d_model), dtype),
+    )
+
+
+def mlstm_block_decode(p, x, cache: MLSTMCache, cfg: XLSTMConfig):
+    b, s, d = x.shape
+    assert s == 1
+    h = cfg.num_heads
+    res = x
+    xn = C.rms_norm(x, p["ln_scale"])
+    up = xn @ p["w_up"].astype(x.dtype)
+    u, gate = jnp.split(up, 2, axis=-1)
+    cu, conv = _conv_silu(u, p["conv_w"], cache.conv)
+    q = (cu @ p["w_q"].astype(x.dtype)).reshape(b, h, -1).astype(jnp.float32)
+    k = (cu @ p["w_k"].astype(x.dtype)).reshape(b, h, -1).astype(jnp.float32)
+    v = (u @ p["w_v"].astype(x.dtype)).reshape(b, h, -1).astype(jnp.float32)
+    if_pre = (cu @ p["w_if"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+    ilog, fpre = if_pre[:, :h], if_pre[:, h:]
+    flog = jax.nn.log_sigmoid(fpre)
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    m_new = jnp.maximum(flog + cache.m, ilog)
+    fdec = jnp.exp(flog + cache.m - m_new)
+    iexp = jnp.exp(ilog - m_new)
+    Cm = cache.Cm * fdec[..., None, None] + iexp[..., None, None] * (
+        v[:, :, :, None] * k[:, :, None, :])
+    n = cache.n * fdec[..., None] + iexp[..., None] * k
+    num = jnp.einsum("bhvp,bhp->bhv", Cm, q * scale)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q * scale)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, -1).astype(x.dtype)
+    y = C.rms_norm(y, p["gn_scale"]) * jax.nn.silu(gate)
+    out = res + y @ p["w_down"].astype(x.dtype)
+    return out, MLSTMCache(Cm=Cm, n=n, m=m_new, conv=conv)
+
+
+# ----------------------------------------------------------------- sLSTM --
+
+
+def init_slstm_block(key, cfg: XLSTMConfig):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    h = cfg.num_heads
+    ph = d // h
+    return {
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        "conv_w": C.normal_init(ks[0], (cfg.conv_width, d)),
+        "w_gates": C.normal_init(ks[1], (d, 4 * d)),        # z i f o pre-acts
+        "r_gates": C.normal_init(ks[2], (h, ph, 4 * ph), scale=0.01),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        # gated MLP, projection factor 4/3
+        "w_mlp_up": C.normal_init(ks[3], (d, 2 * (4 * d // 3))),
+        "w_mlp_down": C.normal_init(ks[4], (4 * d // 3, d)),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B, D]
+    n: jax.Array
+    hs: jax.Array
+    m: jax.Array
+
+
+def init_slstm_state(batch: int, d: int) -> SLSTMState:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, hs=z, m=jnp.full((batch, d), -30.0, jnp.float32))
+
+
+def _slstm_step(p, cfg: XLSTMConfig, state: SLSTMState, gx):
+    """gx: [B, 4D] input gate pre-activations for one step."""
+    b = gx.shape[0]
+    h, ph, d = cfg.num_heads, cfg.head_dim, cfg.d_model
+    hr = state.hs.reshape(b, h, ph)
+    rec = jnp.einsum("bhp,hpq->bhq", hr, p["r_gates"]).reshape(b, 4 * d)
+    zi, ii, fi, oi = jnp.split(gx.astype(jnp.float32) + rec, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(fi) + state.m, ii)
+    f = jnp.exp(jax.nn.log_sigmoid(fi) + state.m - m_new)
+    i = jnp.exp(ii - m_new)
+    c = f * state.c + i * jnp.tanh(zi)
+    n = f * state.n + i
+    hs = jax.nn.sigmoid(oi) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, hs=hs, m=m_new)
+
+
+def slstm_scan(p, cfg: XLSTMConfig, gx_seq, state: SLSTMState):
+    """gx_seq [B, S, 4D] -> (hs_seq [B, S, D], final state).
+
+    Two-level scan: outer over chunks (saved), inner steps rematerialized.
+    """
+    b, s, _ = gx_seq.shape
+    q = min(cfg.slstm_chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+
+    @jax.checkpoint
+    def chunk(state, gxc):
+        def step(st, g):
+            st2 = _slstm_step(p, cfg, st, g)
+            return st2, st2.hs
+        return jax.lax.scan(step, state, gxc)
+
+    def outer(state, gxc):
+        return chunk(state, gxc)
+
+    gxs = gx_seq.reshape(b, nc, q, -1).transpose(1, 2, 0, 3)   # [nc, q, B, 4D]
+    state, hs = jax.lax.scan(outer, state, gxs)                # hs [nc, q, B, D]
+    return hs.transpose(2, 0, 1, 3).reshape(b, s, -1), state
+
+
+def slstm_block_train(p, x, cfg: XLSTMConfig):
+    res = x
+    xn = C.rms_norm(x, p["ln_scale"])
+    cu, _ = _conv_silu(xn, p["conv_w"])
+    gx = cu @ p["w_gates"].astype(x.dtype)
+    hs, _ = slstm_scan(p, cfg, gx, init_slstm_state(x.shape[0], cfg.d_model))
+    hs = C.rms_norm(hs.astype(x.dtype), p["gn_scale"])
+    up = hs @ p["w_mlp_up"].astype(x.dtype)
+    a, g = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a) * g) @ p["w_mlp_down"].astype(x.dtype)
+    return res + y
+
+
+class SLSTMCache(NamedTuple):
+    state: SLSTMState
+    conv: jax.Array
+
+
+def init_slstm_cache(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> SLSTMCache:
+    return SLSTMCache(
+        state=init_slstm_state(batch, cfg.d_model),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model), dtype),
+    )
+
+
+def slstm_block_decode(p, x, cache: SLSTMCache, cfg: XLSTMConfig):
+    res = x
+    xn = C.rms_norm(x, p["ln_scale"])
+    cu, conv = _conv_silu(xn, p["conv_w"], cache.conv)
+    gx = (cu @ p["w_gates"].astype(x.dtype))[:, 0]
+    st = _slstm_step(p, cfg, cache.state, gx)
+    hs = C.rms_norm(st.hs[:, None, :].astype(x.dtype), p["gn_scale"])
+    up = hs @ p["w_mlp_up"].astype(x.dtype)
+    a, g = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a) * g) @ p["w_mlp_down"].astype(x.dtype)
+    return res + y, SLSTMCache(state=st, conv=conv)

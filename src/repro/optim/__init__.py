@@ -1,0 +1,11 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import constant_lr, cosine_lr, linear_warmup_cosine
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "constant_lr",
+    "cosine_lr",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,54 @@
+"""AdamW optimizer (pure pytree functions, no external deps)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float = 0.0,
+):
+    step = state.step + 1
+    if grad_clip > 0:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                for g in jax.tree_util.tree_leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

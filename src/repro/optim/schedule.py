@@ -1,0 +1,24 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(lr: float, total_steps: int, min_ratio: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int, min_ratio: float = 0.1):
+    cos = cosine_lr(lr, max(total_steps - warmup, 1), min_ratio)
+    def f(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup))
+    return f

@@ -1,0 +1,21 @@
+from repro.quant.stochastic import (
+    QuantParams,
+    dequantize,
+    pack_bits,
+    quantize,
+    quantize_packed,
+    dequantize_packed,
+    unpack_bits,
+    wire_bytes,
+)
+
+__all__ = [
+    "QuantParams",
+    "quantize",
+    "dequantize",
+    "pack_bits",
+    "unpack_bits",
+    "quantize_packed",
+    "dequantize_packed",
+    "wire_bytes",
+]

@@ -1,0 +1,120 @@
+"""Stochastic integer quantization (paper §2.4, §6, §7.3).
+
+Decentralized scheme: every worker computes zero-point/scale locally per
+*row group* (4 consecutive rows — the paper fuses parameter computation with
+packing over 4-row tiles so four int2 values pack into one int8), quantizes
+with **stochastic rounding** (unbiased: E[q] = x, the property Lemma 1's
+convergence proof needs), and ships ``(packed ints, fp32 zero, fp32 scale)``.
+No master, no synchronization.
+
+``h_quant = round_stoch((h - Z) / S)``, ``h_dequant = h_quant * S + Z`` with
+``Z = min(h)``, ``S = (max(h) - min(h)) / (2**b - 1)``.
+
+The division is replaced by multiplication with a precomputed reciprocal —
+the paper's A64FX latency trick (§7.3(3)) carried at the insight level.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ROW_GROUP = 4  # rows sharing one (zero, scale) pair; matches the fused kernel
+
+
+class QuantParams(NamedTuple):
+    zero: jax.Array   # [G] fp32 per row group
+    scale: jax.Array  # [G] fp32 per row group
+
+
+def _group_minmax(x: jax.Array, row_group: int) -> Tuple[jax.Array, jax.Array]:
+    rows, feat = x.shape
+    g = rows // row_group
+    xg = x.reshape(g, row_group * feat)
+    return xg.min(axis=1), xg.max(axis=1)
+
+
+def quantize(
+    x: jax.Array,
+    bits: int,
+    key: jax.Array,
+    row_group: int = ROW_GROUP,
+) -> Tuple[jax.Array, QuantParams]:
+    """Stochastic-round ``x`` [R, F] to unsigned ``bits``-wide ints (int32 holder).
+
+    R must be divisible by ``row_group``.
+    """
+    rows, feat = x.shape
+    if rows % row_group:
+        raise ValueError(f"rows {rows} not divisible by row_group {row_group}")
+    levels = (1 << bits) - 1
+    lo, hi = _group_minmax(x, row_group)
+    scale = (hi - lo) / levels
+    # Reciprocal-multiply instead of divide (paper §7.3(3)); guard empty range.
+    safe = jnp.where(scale > 0, scale, 1.0)
+    rcp = 1.0 / safe
+    g = rows // row_group
+    xs = (x.reshape(g, row_group, feat) - lo[:, None, None]) * rcp[:, None, None]
+    u = jax.random.uniform(key, xs.shape, dtype=xs.dtype)
+    q = jnp.floor(xs + u)  # stochastic rounding: unbiased, E[q] = xs
+    q = jnp.clip(q, 0, levels).astype(jnp.int32).reshape(rows, feat)
+    return q, QuantParams(zero=lo, scale=jnp.where(scale > 0, scale, 0.0))
+
+
+def dequantize(
+    q: jax.Array, params: QuantParams, row_group: int = ROW_GROUP
+) -> jax.Array:
+    rows, feat = q.shape
+    g = rows // row_group
+    xq = q.astype(jnp.float32).reshape(g, row_group, feat)
+    x = xq * params.scale[:, None, None] + params.zero[:, None, None]
+    return x.reshape(rows, feat)
+
+
+def pack_bits(q: jax.Array, bits: int) -> jax.Array:
+    """Pack ``q`` in [0, 2^bits) along the last axis into int32 words.
+
+    Feature dim must be divisible by (32 // bits). int32 is the natural TPU
+    lane width; 16 int2 values per word.
+    """
+    per_word = 32 // bits
+    rows, feat = q.shape
+    if feat % per_word:
+        raise ValueError(f"feat {feat} not divisible by {per_word}")
+    qw = q.reshape(rows, feat // per_word, per_word).astype(jnp.uint32)
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
+    packed = jnp.sum(qw << shifts, axis=-1, dtype=jnp.uint32)
+    return packed.astype(jnp.int32)
+
+
+def unpack_bits(packed: jax.Array, bits: int, feat: int) -> jax.Array:
+    per_word = 32 // bits
+    rows = packed.shape[0]
+    pw = packed.astype(jnp.uint32)[:, :, None]
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    q = (pw >> shifts) & mask
+    return q.reshape(rows, feat).astype(jnp.int32)
+
+
+def quantize_packed(
+    x: jax.Array, bits: int, key: jax.Array, row_group: int = ROW_GROUP
+) -> Tuple[jax.Array, QuantParams]:
+    q, params = quantize(x, bits, key, row_group)
+    return pack_bits(q, bits), params
+
+
+def dequantize_packed(
+    packed: jax.Array, params: QuantParams, bits: int, feat: int,
+    row_group: int = ROW_GROUP,
+) -> jax.Array:
+    return dequantize(unpack_bits(packed, bits, feat), params, row_group)
+
+
+def wire_bytes(rows: int, feat: int, bits: int, row_group: int = ROW_GROUP) -> int:
+    """Bytes on the wire: packed payload + fp32 (zero, scale) per row group."""
+    payload = rows * feat * bits // 8
+    params = (rows // row_group) * 2 * 4
+    return payload + params

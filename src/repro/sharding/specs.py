@@ -1,0 +1,206 @@
+"""Sharding rules for the production meshes.
+
+Policy (DESIGN.md §4): 2-D **TP × FSDP** per pod —
+
+* every ≥2-D weight shards its *contraction-adjacent* large dim over
+  ``model`` (tensor parallelism: attention heads / ffn intermediate /
+  vocab / experts) and its other large dim over ``data`` (FSDP / ZeRO-3;
+  XLA inserts the all-gather before use),
+* activations shard batch over (``pod``, ``data``) and heads/ffn over
+  ``model``,
+* decode KV caches shard the *sequence* dim over ``model`` (kv-head counts
+  of the assigned archs are mostly < 16, so head-sharding is not available;
+  attention over a sequence-sharded cache lowers to partial softmax +
+  collectives, flash-decoding style),
+* scalars / small vectors replicate.
+
+In the paper's vocabulary: choosing reduce-scatter-style ("pre-aggregate
+then transfer") vs all-gather-style ("transfer then aggregate") placements
+is the dense-collective analogue of the pre/post-aggregation choice (§5).
+
+Name-based overrides first, then a dimension-divisibility fallback, so
+every architecture lowers even where its dims don't divide the mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes used for data parallelism ('pod' folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _divides(dim: int, mesh: Mesh, axes) -> bool:
+    n = _axis_size(mesh, axes)
+    return dim % n == 0 and dim >= n
+
+
+# Weight-name fragments whose *last* dim is TP-sharded (output-feature TP).
+_COL_PARALLEL = ("w_q", "w_k", "w_v", "w_gate", "w_up", "w_in", "w_mlp_up",
+                 "w_dkv", "w_kpe", "w_uk", "w_uv", "b_q", "b_k", "b_v",
+                 "lm_head", "router", "w_gates", "b_in")
+# Weight-name fragments whose *first non-stack* dim is TP-sharded (input TP,
+# output needs reduce — the "pre-aggregation" side).
+_ROW_PARALLEL = ("w_o", "w_down", "w_out", "w_mlp_down")
+_EXPERT_STACKED = ("w_gate", "w_up", "w_down")  # under a "moe" subtree
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               stacked: bool, fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf. ``stacked``: leading scan dim.
+
+    ``fsdp=False`` (inference): weights are TP-sharded only — per-layer
+    FSDP all-gathers don't amortize over one decoded token (§Perf iter C).
+    """
+    d_ax = data_axes(mesh) if fsdp else ()
+    lead = (None,) if stacked else ()
+    dims = shape[1:] if stacked else shape
+    name = path.rsplit("/", 1)[-1]
+
+    def dax_if(dim: int):
+        return d_ax if (d_ax and _divides(dim, mesh, d_ax)) else None
+
+    if len(dims) == 0:
+        return P(*lead) if lead else P()
+    # MoE expert stacks: [E, D, F] — experts over model (expert parallelism),
+    # D over data (FSDP).
+    if "moe" in path and name in _EXPERT_STACKED and len(dims) == 3:
+        e, d, f = dims
+        spec = ("model" if _divides(e, mesh, "model") else None,
+                dax_if(d),
+                None)
+        return P(*lead, *spec)
+    if name == "embed" and len(dims) == 2:
+        v, d = dims
+        if not fsdp:
+            # Inference: vocab replicated, d_model over model — the token
+            # gather is collective-free (a vocab-sharded table forces GSPMD
+            # to replicate the whole table per gather; §Perf iter C).
+            return P(*lead, None,
+                     "model" if _divides(d, mesh, "model") else None)
+        # Train: the D-sharded-gather layout trips a GSPMD verifier bug on
+        # the jvp path and leaks a D-shard into every layer matmul
+        # (§Perf iter D, refuted branch). Small tables replicate outright
+        # (local gather, no replication waste); big ones keep vocab x data.
+        if v * d * 4 <= 512 * 1024 * 1024:
+            return P(*lead, None, None)
+        return P(*lead,
+                 "model" if _divides(v, mesh, "model") else None,
+                 dax_if(d))
+    if len(dims) == 1:
+        n = dims[0]
+        if any(k in name for k in _COL_PARALLEL) and _divides(n, mesh, "model"):
+            return P(*lead, "model")
+        return P(*lead, None)
+    if len(dims) == 2:
+        a, b = dims
+        if any(name == k or name.startswith(k) for k in _ROW_PARALLEL):
+            return P(*lead,
+                     "model" if _divides(a, mesh, "model") else None,
+                     dax_if(b))
+        if any(name == k or name.startswith(k) for k in _COL_PARALLEL):
+            return P(*lead, dax_if(a),
+                     "model" if _divides(b, mesh, "model") else None)
+        # Fallback: biggest dim -> model, other -> data.
+        if a >= b:
+            return P(*lead,
+                     "model" if _divides(a, mesh, "model") else None,
+                     dax_if(b))
+        return P(*lead, dax_if(a),
+                 "model" if _divides(b, mesh, "model") else None)
+    # rank >= 3 fallback: shard the largest divisible dim over model.
+    sizes = list(dims)
+    order = sorted(range(len(sizes)), key=lambda i: -sizes[i])
+    spec: list = [None] * len(sizes)
+    for i in order:
+        if _divides(sizes[i], mesh, "model"):
+            spec[i] = "model"
+            break
+    return P(*lead, *spec)
+
+
+def _tree_paths(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else k, v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = node
+    rec("", tree)
+    return flat
+
+
+def param_specs(param_shapes, mesh: Mesh, stacked_keys=("blocks", "enc_blocks"),
+                fsdp: bool = True):
+    """Pytree of PartitionSpec matching ``param_shapes`` (from eval_shape)."""
+
+    def rec(prefix, node, stacked):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else k, v,
+                           stacked or k in stacked_keys)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [rec(f"{prefix}/{i}", v, stacked) for i, v in enumerate(node)]
+            return type(node)(t)
+        return _leaf_spec(prefix, tuple(node.shape), mesh, stacked, fsdp=fsdp)
+
+    return rec("", param_shapes, False)
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Spec for [B, ...] activations: batch over (pod, data) when divisible."""
+    d_ax = data_axes(mesh)
+    b_axis = d_ax if batch % _axis_size(mesh, d_ax) == 0 else None
+    return P(b_axis, *([None] * extra_dims))
+
+
+def cache_specs(cache_shapes, mesh: Mesh, batch: int):
+    """Specs for a ServeCache pytree: [L, B, S, ...] — B over data if it
+    divides, cache sequence dim over model if it divides."""
+    d_ax = data_axes(mesh)
+    dsize = _axis_size(mesh, d_ax)
+    msize = mesh.shape["model"]
+
+    def leaf(x):
+        shape = tuple(x.shape)
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] == batch and batch % dsize == 0:
+            spec[1] = d_ax
+        # Find a sequence-like dim (largest dim beyond batch) for model.
+        if len(shape) >= 3:
+            cand = sorted(range(2, len(shape)), key=lambda i: -shape[i])
+            for i in cand:
+                if shape[i] % msize == 0 and shape[i] >= 4 * msize:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map(leaf, cache_shapes)
+
+
+def spec_for_array(x, mesh: Mesh, batch: Optional[int] = None) -> P:
+    shape = tuple(x.shape)
+    if batch is not None and shape and shape[0] == batch:
+        return batch_spec(mesh, batch, extra_dims=len(shape) - 1)
+    return P(*([None] * len(shape)))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,4 @@
+from repro.utils.registry import Registry
+from repro.utils.trees import param_count, tree_bytes
+
+__all__ = ["Registry", "param_count", "tree_bytes"]

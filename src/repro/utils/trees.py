@@ -1,0 +1,25 @@
+"""Pytree helpers."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))

@@ -1,0 +1,13 @@
+import os
+
+# Keep CPU test runs deterministic and quiet. NOTE: the 512-device XLA flag
+# is intentionally NOT set here — only launch/dryrun.py uses it.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

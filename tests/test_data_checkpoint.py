@@ -1,0 +1,87 @@
+"""Data pipeline + checkpoint substrates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_train_state, save_checkpoint
+from repro.data import TokenPipeline, make_gcn_dataset
+
+
+class TestTokenPipeline:
+    def test_shapes_and_range(self):
+        tp = TokenPipeline(vocab_size=100, seed=0)
+        b = tp.batch(4, 64)
+        assert b.shape == (4, 64)
+        assert b.min() >= 0 and b.max() < 100
+
+    def test_deterministic_given_seed(self):
+        a = TokenPipeline(50, seed=7).batch(2, 32)
+        b = TokenPipeline(50, seed=7).batch(2, 32)
+        np.testing.assert_array_equal(a, b)
+
+    def test_motifs_make_it_learnable(self):
+        """A bigram predictor beats unigram entropy on this stream."""
+        tp = TokenPipeline(64, seed=0)
+        toks = tp.batch(8, 512)
+        pairs = {}
+        for row in toks:
+            for a, b in zip(row[:-1], row[1:]):
+                pairs.setdefault(int(a), []).append(int(b))
+        # for tokens inside motifs, the successor is near-deterministic
+        best = max(
+            (max(np.bincount(v)) / len(v) for v in pairs.values() if len(v) > 20),
+            default=0)
+        assert best > 0.3
+
+    def test_batches_iterator(self):
+        it = TokenPipeline(32, seed=1).batches(2, 16, steps=3)
+        batches = list(it)
+        assert len(batches) == 3
+        assert batches[0]["tokens"].shape == (2, 16)
+
+
+class TestGraphDatasets:
+    def test_presets(self):
+        ds = make_gcn_dataset("tiny", seed=0)
+        assert ds.graph.num_nodes == 1024
+        assert ds.features.shape == (1024, 32)
+        assert ds.num_classes == 8
+        assert ds.graph.labels is not None
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError):
+            make_gcn_dataset("nope")
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"layers": [{"w": jnp.arange(6.0).reshape(2, 3),
+                            "b": jnp.zeros(3)}],
+                "step": jnp.asarray(5, jnp.int32)}
+        p = save_checkpoint(tmp_path / "ck", tree, step=5, meta={"note": "t"})
+        assert p.exists()
+        restored, manifest = restore_train_state(tmp_path / "ck", tree)
+        assert manifest["step"] == 5
+        np.testing.assert_array_equal(np.asarray(restored["layers"][0]["w"]),
+                                      np.arange(6.0).reshape(2, 3))
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        tree = {"w": jnp.zeros((2, 2))}
+        save_checkpoint(tmp_path / "ck", tree)
+        bad = {"w": jnp.zeros((3, 2))}
+        with pytest.raises(ValueError):
+            restore_train_state(tmp_path / "ck", bad)
+
+    def test_restores_model_params(self, tmp_path):
+        from repro.configs import get_smoke_arch
+        from repro.models import init_params
+        cfg = get_smoke_arch("tinyllama-1.1b")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        save_checkpoint(tmp_path / "model", params, step=1)
+        template = jax.tree_util.tree_map(jnp.zeros_like, params)
+        restored, _ = restore_train_state(tmp_path / "model", template)
+        a = jax.tree_util.tree_leaves(params)[0]
+        b = jax.tree_util.tree_leaves(restored)[0]
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))

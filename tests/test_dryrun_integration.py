@@ -1,0 +1,52 @@
+"""Integration: the dry-run machinery on the production mesh, via a
+subprocess so the 512-device XLA flag never leaks into this test process."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo_compiles(tmp_path):
+    """Smallest production combo: lower + compile + analyses succeed."""
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-small", "--shape", "decode_32k"],
+        env=env, capture_output=True, text=True, timeout=560, cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.loads(
+        (ROOT / "experiments/dryrun/whisper-small__decode_32k__16x16.json")
+        .read_text())
+    assert rec["status"] == "ok"
+    assert rec["memory"]["temp_size_in_bytes"] > 0
+    assert rec["hlo_analysis"]["dot_flops"] > 0
+    assert rec["collectives"]["total"]["count"] > 0
+
+
+def test_dryrun_artifacts_cover_all_pairs():
+    """After the sweep: every (arch x shape x mesh) has an artifact and no
+    artifact is an error. (Skips if the sweep hasn't been run yet.)"""
+    from repro.configs import ARCH_NAMES, INPUT_SHAPES
+    out = ROOT / "experiments" / "dryrun"
+    if not out.exists() or len(list(out.glob("*.json"))) < 10:
+        pytest.skip("dry-run sweep artifacts not present")
+    missing, errors = [], []
+    for mesh in ("16x16", "2x16x16"):
+        for a in ARCH_NAMES:
+            for s in INPUT_SHAPES:
+                p = out / f"{a}__{s}__{mesh}.json"
+                if not p.exists():
+                    missing.append(p.name)
+                    continue
+                rec = json.loads(p.read_text())
+                if rec["status"] == "error":
+                    errors.append(p.name)
+    assert not missing, f"missing artifacts: {missing}"
+    assert not errors, f"failed combos: {errors}"

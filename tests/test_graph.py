@@ -1,0 +1,189 @@
+"""Graph substrate: structures, generators, partitioner, MVC (paper §5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (
+    Graph,
+    build_partitioned_graph,
+    cut_edges,
+    erdos_graph,
+    hopcroft_karp,
+    min_vertex_cover_bipartite,
+    partition_graph,
+    partition_stats,
+    rmat_graph,
+    sbm_graph,
+)
+from repro.graph.mvc import verify_cover
+from repro.graph.structure import coo_to_csr, ell_from_csr
+
+
+class TestStructure:
+    def test_csr_roundtrip(self):
+        src = np.array([0, 2, 1, 2, 0], np.int32)
+        dst = np.array([1, 1, 0, 2, 2], np.int32)
+        csr = coo_to_csr(src, dst, None, 3, 3)
+        assert csr.nnz == 5
+        assert list(np.diff(csr.indptr)) == [1, 2, 2]
+        # row 1 receives from {0, 2}
+        assert sorted(csr.indices[csr.indptr[1]:csr.indptr[2]].tolist()) == [0, 2]
+
+    def test_gcn_normalization_row_weights(self):
+        g = erdos_graph(200, 6.0, seed=1).gcn_normalized()
+        # symmetric normalization: all weights in (0, 1]
+        assert (g.edge_weight > 0).all() and (g.edge_weight <= 1).all()
+
+    def test_mean_normalization_rows_sum_to_one(self):
+        g = erdos_graph(100, 5.0, seed=2).mean_normalized()
+        csr = g.csr_by_dst()
+        deg = np.diff(csr.indptr)
+        sums = np.zeros(g.num_nodes)
+        np.add.at(sums, np.repeat(np.arange(g.num_nodes), deg), csr.weights)
+        nz = deg > 0
+        np.testing.assert_allclose(sums[nz], 1.0, rtol=1e-5)
+
+    def test_undirected_symmetry(self):
+        g = rmat_graph(8, 4, seed=3)
+        fwd = set(zip(g.src.tolist(), g.dst.tolist()))
+        assert all((d, s) in fwd for s, d in fwd)
+
+    def test_ell_matches_csr(self):
+        g = erdos_graph(64, 4.0, seed=4).mean_normalized()
+        csr = g.csr_by_dst()
+        idx, w, valid = ell_from_csr(csr)
+        deg = np.diff(csr.indptr)
+        assert (valid.sum(1) == deg).all()
+        assert w[~valid].sum() == 0
+
+
+class TestPartitioner:
+    def test_balance_and_cut_quality(self):
+        g = sbm_graph(2000, 8, avg_degree=12, homophily=0.9, seed=0)
+        part = partition_graph(g, 8, seed=0)
+        stats = partition_stats(g, part)
+        assert stats["load_imbalance"] < 1.3
+        # NB: not seed 0 — that reproduces the SBM's planted labels exactly
+        rng = np.random.default_rng(12345)
+        rand_part = rng.integers(0, 8, g.num_nodes).astype(np.int32)
+        rand_cut = cut_edges(g, rand_part).sum()
+        # community structure => our cut must beat random by a wide margin
+        assert stats["cut_edges"] < 0.6 * rand_cut
+
+    def test_every_node_assigned(self):
+        g = rmat_graph(9, 4, seed=1)
+        part = partition_graph(g, 4, seed=1)
+        assert part.min() >= 0 and part.max() == 3
+
+    def test_single_part(self):
+        g = erdos_graph(50, 4.0, seed=0)
+        part = partition_graph(g, 1)
+        assert (part == 0).all()
+
+
+class TestMVC:
+    def test_hopcroft_karp_perfect_matching(self):
+        # complete bipartite K_{3,3}: matching size 3
+        eu = np.repeat(np.arange(3), 3)
+        ev = np.tile(np.arange(3), 3)
+        mu, mv = hopcroft_karp(3, 3, eu, ev)
+        assert (mu >= 0).sum() == 3
+
+    def test_koenig_cover_equals_matching(self):
+        rng = np.random.default_rng(5)
+        for trial in range(10):
+            nu, nv = rng.integers(2, 30, 2)
+            ne = int(rng.integers(1, nu * nv))
+            eu = rng.integers(0, nu, ne)
+            ev = rng.integers(0, nv, ne)
+            cu, cv = min_vertex_cover_bipartite(nu, nv, eu, ev)
+            assert verify_cover(eu, ev, cu, cv)
+            mu, _ = hopcroft_karp(nu, nv, eu, ev)
+            assert cu.sum() + cv.sum() == (mu >= 0).sum()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 20), st.integers(1, 20), st.integers(0, 12345))
+    def test_cover_property(self, nu, nv, seed):
+        rng = np.random.default_rng(seed)
+        ne = int(rng.integers(1, nu * nv + 1))
+        eu = rng.integers(0, nu, ne)
+        ev = rng.integers(0, nv, ne)
+        cu, cv = min_vertex_cover_bipartite(nu, nv, eu, ev)
+        # cover covers all edges and is no larger than either side's node set
+        assert verify_cover(eu, ev, cu, cv)
+        assert cu.sum() + cv.sum() <= min(len(np.unique(eu)), len(np.unique(ev)))
+
+
+class TestPrePostAggregation:
+    def test_fig4_example(self):
+        """The paper's Fig 4: 5 cut edges, pre=post=3, hybrid=2."""
+        # S0 owns {1,2,3}, S1 owns {4,5,6}. Cut edges (src->dst):
+        # 4->1, 4->2, 4->3 (src 4 covers), 5->2, 6->2 (dst 2 covers).
+        src = np.array([4, 4, 4, 5, 6], np.int32)
+        dst = np.array([1, 2, 3, 2, 2], np.int32)
+        g = Graph(7, src, dst)
+        part = np.array([0, 0, 0, 0, 1, 1, 1], np.int32)  # node0 unused pad
+        pg = build_partitioned_graph(g, 2, part=part, strategy="hybrid")
+        assert pg.stats.vanilla == 5
+        assert pg.stats.pre == 3
+        assert pg.stats.post == 3
+        assert pg.stats.hybrid == 2
+
+    @pytest.mark.parametrize("gen,kw", [
+        (rmat_graph, dict(scale=10, edge_factor=6)),
+        (sbm_graph, dict(num_nodes=1500, num_blocks=6, avg_degree=10)),
+        (erdos_graph, dict(num_nodes=800, avg_degree=6.0)),
+    ])
+    def test_hybrid_optimality_ordering(self, gen, kw):
+        g = gen(seed=7, **kw)
+        pg = build_partitioned_graph(g, 6, seed=0, strategy="hybrid")
+        s = pg.stats
+        # Table 5 ordering: hybrid <= min(pre, post) <= vanilla
+        assert s.hybrid <= min(s.pre, s.post)
+        assert min(s.pre, s.post) <= s.vanilla
+
+    def test_plan_covers_all_cut_edges(self):
+        g = rmat_graph(9, 6, seed=9).mean_normalized()
+        pg = build_partitioned_graph(g, 4, seed=1, strategy="hybrid")
+        cut = int((pg.part[g.src] != pg.part[g.dst]).sum())
+        planned = sum(len(p.post_row) + len(p.pre_src_local)
+                      for p in pg.pair_plans.values())
+        assert planned == cut
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(2, 6), st.integers(0, 999))
+    def test_distributed_aggregation_equals_global(self, nparts, seed):
+        """Property: local + pre/post halo aggregation == full-graph SpMM."""
+        from repro.graph.remote import build_halo_plan
+        g = erdos_graph(300, 5.0, seed=seed).mean_normalized()
+        pg = build_partitioned_graph(g, nparts, seed=seed, strategy="hybrid")
+        hp = build_halo_plan(pg)
+        rng = np.random.default_rng(seed)
+        F = 4
+        x = rng.normal(size=(g.num_nodes, F)).astype(np.float32)
+        # global reference
+        csr = g.csr_by_dst()
+        ref = np.zeros((g.num_nodes, F), np.float32)
+        np.add.at(ref, np.repeat(np.arange(g.num_nodes), np.diff(csr.indptr)),
+                  csr.weights[:, None] * x[csr.indices])
+        # simulated distributed execution
+        P, R = nparts, hp.rows_per_pair
+        xloc = [x[pg.owned[p]] for p in range(P)]
+        send = np.zeros((P, P * R, F), np.float32)
+        for q in range(P):
+            m = hp.send_gather_mask[q]
+            send[q][m] = xloc[q][hp.send_gather_idx[q][m]]
+            np.add.at(send[q], hp.pre_slot[q],
+                      hp.pre_weight[q][:, None] * xloc[q][hp.pre_src[q]])
+        out = np.zeros((g.num_nodes, F), np.float32)
+        for p in range(P):
+            recv = np.concatenate([send[q, p * R:(p + 1) * R] for q in range(P)])
+            o = np.zeros((len(pg.owned[p]), F), np.float32)
+            lc = pg.local_csr[p]
+            np.add.at(o, np.repeat(np.arange(lc.num_rows), np.diff(lc.indptr)),
+                      lc.weights[:, None] * xloc[p][lc.indices])
+            np.add.at(o, hp.recv_dst[p],
+                      hp.recv_weight[p][:, None] * recv[hp.recv_row[p]])
+            out[pg.owned[p]] = o
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)

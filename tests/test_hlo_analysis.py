@@ -1,0 +1,111 @@
+"""The loop-aware HLO analysis layer (launch/hlo_stats.py) — the roofline's
+measurement foundation, validated on programs with known costs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_stats import analyze_hlo, parse_collectives
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+class TestDotFlops:
+    def test_plain_matmul(self):
+        txt = _compile(lambda a, b: a @ b,
+                       jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                       jax.ShapeDtypeStruct((32, 16), jnp.float32))
+        flops = analyze_hlo(txt)["dot_flops"]
+        assert flops == 2 * 64 * 32 * 16
+
+    def test_scan_multiplies_trip_count(self):
+        def f(x, w):
+            def body(h, _):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, x, None, length=10)
+            return h
+        txt = _compile(f, jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                       jax.ShapeDtypeStruct((256, 256), jnp.float32))
+        flops = analyze_hlo(txt)["dot_flops"]
+        assert flops == 10 * 2 * 128 * 256 * 256
+
+    def test_grad_counts_fwd_recompute_bwd(self):
+        def g(x, w):
+            def body(h, _):
+                return jax.checkpoint(lambda hh: jnp.tanh(hh @ w))(h), None
+            h, _ = jax.lax.scan(body, x, None, length=7)
+            return h.sum()
+        txt = _compile(jax.grad(g, argnums=1),
+                       jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                       jax.ShapeDtypeStruct((128, 128), jnp.float32))
+        flops = analyze_hlo(txt)["dot_flops"]
+        # fwd + remat recompute + 2 bwd matmuls = 4x fwd
+        assert flops == pytest.approx(4 * 7 * 2 * 64 * 128 * 128, rel=0.01)
+
+    def test_batched_einsum(self):
+        def f(a, b):
+            return jnp.einsum("bik,bkj->bij", a, b)
+        txt = _compile(f, jax.ShapeDtypeStruct((4, 8, 16), jnp.float32),
+                       jax.ShapeDtypeStruct((4, 16, 8), jnp.float32))
+        flops = analyze_hlo(txt)["dot_flops"]
+        assert flops == 2 * 4 * 8 * 16 * 8
+
+
+class TestCollectiveParsing:
+    def test_compact_replica_groups(self):
+        hlo = """
+ENTRY %main (a: f32[4]) -> f32[64] {
+  %ag = f32[64]{0} all-gather(%a), replica_groups=[4,16]<=[64], dimensions={0}
+}
+"""
+        st = parse_collectives(hlo)
+        assert st["all-gather"]["count"] == 1
+        np.testing.assert_allclose(st["all-gather"]["wire_bytes"],
+                                   256 * 15 / 16)
+
+    def test_explicit_list_replica_groups(self):
+        """shard_map emits explicit {{0,1,...}} lists — group size must be
+        parsed from the id count (regression: GCN dry-run parsed g=1)."""
+        hlo = """
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %psum.1 = f32[8]{0} all-reduce(%a), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, to_apply=%add
+}
+"""
+        st = parse_collectives(hlo)
+        ar = st["all-reduce"]
+        np.testing.assert_allclose(ar["wire_bytes"], 32 * 2 * 15 / 16)
+
+    def test_tuple_result_all_to_all(self):
+        """Tuple results carry /*index=N*/ comments containing '=' — the op
+        regex must span them (regression: GCN a2a ops were invisible)."""
+        hlo = """
+ENTRY %main (a: f32[2]) -> f32[2] {
+  %all-to-all.1 = (f32[1,7]{1,0}, f32[1,7]{1,0}, /*index=2*/f32[1,7]{1,0}, f32[1,7]{1,0}) all-to-all(%a, %b, %c, %d), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+        st = parse_collectives(hlo)
+        a2a = st["all-to-all"]
+        assert a2a["count"] == 1
+        assert a2a["result_bytes"] == 4 * 7 * 4
+
+    def test_while_loop_multiplication_end_to_end(self):
+        """Compiled JAX scan with a psum inside (vmap->jit collective)."""
+        mesh = jax.make_mesh((1,), ("w",))
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def worker(x):
+            def body(c, xi):
+                return c + jax.lax.psum(xi, "w"), None
+            out, _ = jax.lax.scan(body, jnp.zeros_like(x[0]), x)
+            return out
+        f = shard_map(worker, mesh=mesh, in_specs=(P(None),), out_specs=P(),
+                      check_rep=False)
+        txt = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((5, 8), jnp.float32)).compile().as_text()
+        st = parse_collectives(txt)
+        # 5 loop iterations x 1 psum (or unrolled equivalents)
+        assert st["total"]["count"] >= 1

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import aggregate, dequantize_unpack, quantize_pack
+from repro.kernels import ref
+from repro.kernels.quant_pack import dequant_unpack, quant_pack
+from repro.kernels.seg_aggregate import seg_aggregate
+
+
+class TestSegAggregate:
+    @pytest.mark.parametrize("n,f,r,k", [
+        (64, 128, 8, 1),
+        (300, 256, 64, 20),
+        (1000, 384, 256, 33),
+        (128, 128, 16, 7),
+        (50, 512, 8, 5),
+    ])
+    def test_matches_oracle_shapes(self, n, f, r, k):
+        kx, ki, kw, km = jax.random.split(jax.random.PRNGKey(n + f + r + k), 4)
+        x = jax.random.normal(kx, (n, f))
+        idx = jax.random.randint(ki, (r, k), 0, n)
+        w = jax.random.uniform(kw, (r, k)) * (jax.random.uniform(km, (r, k)) > 0.3)
+        out = seg_aggregate(x, idx, w, interpret=True)
+        expect = ref.seg_aggregate_ref(x, idx, w)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        kx, ki = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(kx, (100, 128)).astype(dtype)
+        idx = jax.random.randint(ki, (16, 9), 0, 100)
+        w = jnp.ones((16, 9), jnp.float32)
+        out = seg_aggregate(x, idx, w, interpret=True)
+        expect = ref.seg_aggregate_ref(x, idx, w)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   expect.astype(jnp.float32),
+                                   rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                                   atol=1e-1 if dtype == jnp.bfloat16 else 1e-5)
+
+    def test_block_shape_sweep(self):
+        """Different BlockSpec tilings must not change the result."""
+        kx, ki, kw = jax.random.split(jax.random.PRNGKey(3), 3)
+        x = jax.random.normal(kx, (200, 256))
+        idx = jax.random.randint(ki, (32, 12), 0, 200)
+        w = jax.random.uniform(kw, (32, 12))
+        expect = ref.seg_aggregate_ref(x, idx, w)
+        for br, bf, bk in [(8, 128, 4), (16, 128, 16), (8, 256, 12), (32, 128, 3)]:
+            out = seg_aggregate(x, idx, w, block_rows=br, block_feat=bf,
+                                block_k=bk, interpret=True)
+            np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"blocks ({br},{bf},{bk})")
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 8), st.integers(1, 24), st.integers(0, 9999))
+    def test_linearity_property(self, rows8, k, seed):
+        """Aggregation is linear: agg(a*x) == a*agg(x)."""
+        r = rows8 * 8
+        kx, ki, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(kx, (64, 128))
+        idx = jax.random.randint(ki, (r, k), 0, 64)
+        w = jax.random.uniform(kw, (r, k))
+        out1 = seg_aggregate(x, idx, w, interpret=True)
+        out2 = seg_aggregate(2.5 * x, idx, w, interpret=True)
+        np.testing.assert_allclose(2.5 * out1, out2, rtol=1e-4, atol=1e-4)
+
+    def test_unaligned_falls_back(self):
+        x = jnp.ones((10, 60))       # 60 not a lane multiple
+        idx = jnp.zeros((5, 3), jnp.int32)
+        w = jnp.ones((5, 3))
+        out = aggregate(x, idx, w)   # dispatcher uses the jnp oracle
+        np.testing.assert_allclose(out, 3.0 * jnp.ones((5, 60)))
+
+
+class TestQuantPack:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("rows,feat", [(8, 32), (128, 256), (64, 48)])
+    def test_matches_oracle(self, bits, rows, feat):
+        per_word = 32 // bits
+        if feat % per_word:
+            pytest.skip("unaligned feat")
+        kx, kn = jax.random.split(jax.random.PRNGKey(bits * rows + feat))
+        x = jax.random.normal(kx, (rows, feat)) * 3 + 1
+        noise = jax.random.uniform(kn, (rows, feat))
+        pk, zk, sk = quant_pack(x, noise, bits=bits, interpret=True)
+        pr, zr, sr = ref.quant_pack_ref(x, noise, bits)
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        np.testing.assert_allclose(zk, zr, rtol=1e-6)
+        np.testing.assert_allclose(sk, sr, rtol=1e-6)
+        dk = dequant_unpack(pk, zk, sk, bits=bits, feat=feat, interpret=True)
+        dr = ref.dequant_unpack_ref(pr, zr, sr, bits, feat)
+        np.testing.assert_allclose(dk, dr, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_roundtrip_error_bound(self, bits):
+        """|dequant(quant(x)) - x| <= one quantization step per row group."""
+        kx, kn = jax.random.split(jax.random.PRNGKey(7))
+        x = jax.random.normal(kx, (64, 64)) * 5
+        noise = jax.random.uniform(kn, (64, 64))
+        pk, z, s = quantize_pack(x, noise, bits=bits)
+        xd = dequantize_unpack(pk, z, s, bits=bits, feat=64)
+        err = jnp.abs(xd - x).reshape(16, -1).max(axis=1)
+        np.testing.assert_array_less(np.asarray(err), np.asarray(s) * 1.001 + 1e-6)
+
+    def test_stochastic_rounding_unbiased(self):
+        x = jnp.full((4, 64), 0.37) + jnp.linspace(0, 1, 64)
+        acc = jnp.zeros_like(x)
+        n = 300
+        for i in range(n):
+            kn = jax.random.PRNGKey(i)
+            noise = jax.random.uniform(kn, x.shape)
+            pk, z, s = quantize_pack(x, noise, bits=2)
+            acc = acc + dequantize_unpack(pk, z, s, bits=2, feat=64)
+        bias = float(jnp.abs(acc / n - x).max())
+        assert bias < 0.08, bias  # E[dequant] -> x
+
+    def test_constant_rows(self):
+        """Degenerate range (max == min) must not produce NaNs."""
+        x = jnp.full((8, 32), 3.14)
+        noise = jnp.full((8, 32), 0.5)
+        pk, z, s = quantize_pack(x, noise, bits=2)
+        xd = dequantize_unpack(pk, z, s, bits=2, feat=32)
+        assert jnp.isfinite(xd).all()
+        np.testing.assert_allclose(xd, x, rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.sampled_from([2, 4, 8]), st.integers(1, 16), st.integers(0, 9999))
+    def test_pack_is_lossless_property(self, bits, groups, seed):
+        """pack -> unpack is exact for any quantized payload."""
+        from repro.quant.stochastic import pack_bits, unpack_bits
+        rows = groups * 4
+        levels = (1 << bits) - 1
+        q = jax.random.randint(jax.random.PRNGKey(seed), (rows, 32), 0, levels + 1)
+        packed = pack_bits(q, bits)
+        q2 = unpack_bits(packed, bits, 32)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))

@@ -1,0 +1,195 @@
+"""Assigned architectures: per-arch smoke tests (reduced configs, CPU) —
+one forward/train step asserting output shapes + no NaNs, one serve step,
+and train-vs-decode consistency for representative families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch, get_smoke_arch
+from repro.models import (
+    compute_loss,
+    forward_train,
+    init_cache,
+    init_params,
+    serve_step,
+    train_step,
+)
+from repro.optim import adamw_init
+
+
+def _batch(cfg, key, b=2, s=32):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (b, cfg.enc_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(key, (b, cfg.vision_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+class TestSmokeArchs:
+    def test_forward_shapes_no_nans(self, name):
+        cfg = get_smoke_arch(name)
+        assert cfg.num_layers <= 4 and cfg.d_model <= 512
+        if cfg.moe:
+            assert cfg.moe.num_experts <= 4
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        batch = _batch(cfg, jax.random.PRNGKey(1))
+        logits, aux = forward_train(params, cfg, batch["tokens"],
+                                    {k: v for k, v in batch.items()
+                                     if k != "tokens"} or None)
+        b, s = batch["tokens"].shape
+        assert logits.shape == (b, s, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+        assert bool(jnp.isfinite(aux))
+
+    def test_one_train_step(self, name):
+        cfg = get_smoke_arch(name)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        batch = _batch(cfg, jax.random.PRNGKey(2))
+        p2, o2, loss = jax.jit(
+            lambda p, o, b: train_step(p, o, b, cfg))(params, opt, batch)
+        assert bool(jnp.isfinite(loss))
+        # params actually moved
+        moved = any(
+            float(jnp.abs(a - b2).max()) > 0
+            for a, b2 in zip(jax.tree_util.tree_leaves(params),
+                             jax.tree_util.tree_leaves(p2)))
+        assert moved
+
+    def test_serve_step_shapes(self, name):
+        cfg = get_smoke_arch(name)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        cache = init_cache(cfg, 2, 64)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        logits, cache2 = jax.jit(
+            lambda p, c, t: serve_step(p, c, t, cfg))(params, cache, tok)
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    def test_full_config_dims(self, name):
+        """The production config carries the exact assigned dimensions."""
+        cfg = get_arch(name)
+        assigned = {
+            "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+            "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+            "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+            "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+            "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+            "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+            "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+            "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+            "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+            "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        }[name]
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == assigned
+        assert cfg.source  # citation present
+
+
+class TestFamilySpecifics:
+    def test_moe_capacity_drop_is_bounded(self):
+        from repro.models.moe import MoEConfig, init_moe, moe_ffn
+        cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                        capacity_factor=1.25)
+        p = init_moe(jax.random.PRNGKey(0), 32, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+        out, aux = moe_ffn(p, x, cfg)
+        assert out.shape == x.shape
+        assert bool(jnp.isfinite(out).all())
+        assert float(aux) > 0
+
+    def test_moe_aux_loss_balanced_router_is_minimal(self):
+        """A perfectly uniform router gives aux = coef (switch-loss minimum)."""
+        from repro.models.moe import MoEConfig, init_moe, moe_ffn
+        cfg = MoEConfig(num_experts=4, top_k=1, d_ff_expert=16,
+                        aux_loss_coef=1.0, capacity_factor=4.0)
+        p = init_moe(jax.random.PRNGKey(0), 8, cfg)
+        p["router"] = jnp.zeros_like(p["router"])  # uniform probs
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 8))
+        _, aux = moe_ffn(p, x, cfg)
+        assert abs(float(aux) - 1.0) < 0.05
+
+    def test_mamba_decode_matches_train(self):
+        from repro.models.mamba2 import (MambaConfig, init_mamba, init_mamba_cache,
+                                         mamba_decode, mamba_train)
+        cfg = MambaConfig(d_inner=64, head_dim=16, state_dim=8, chunk=8)
+        p = init_mamba(jax.random.PRNGKey(0), 32, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 24, 32)) * 0.5
+        y_par = mamba_train(p, x, cfg)
+        cache = init_mamba_cache(1, cfg)
+        ys = []
+        for t in range(24):
+            y, cache = mamba_decode(p, x[:, t:t + 1], cache, cfg)
+            ys.append(y)
+        y_seq = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                                   rtol=2e-2, atol=2e-3)
+
+    def test_mlstm_decode_matches_train(self):
+        from repro.models.xlstm import (XLSTMConfig, init_mlstm_block,
+                                        init_mlstm_cache, mlstm_block_decode,
+                                        mlstm_block_train)
+        cfg = XLSTMConfig(d_model=32, num_heads=2, q_chunk=8)
+        p = init_mlstm_block(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32)) * 0.5
+        y_par = mlstm_block_train(p, x, cfg)
+        cache = init_mlstm_cache(1, cfg)
+        ys = []
+        for t in range(16):
+            y, cache = mlstm_block_decode(p, x[:, t:t + 1], cache, cfg)
+            ys.append(y)
+        y_seq = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                                   rtol=3e-2, atol=3e-3)
+
+    def test_sliding_window_masks_far_context(self):
+        from repro.models.attention import AttnConfig, sdpa_chunked
+        b, s, h, hd = 1, 32, 2, 16
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(k1, (b, s, h, hd))
+        k = jax.random.normal(k2, (b, s, h, hd))
+        v = jax.random.normal(k3, (b, s, h, hd))
+        full = sdpa_chunked(q, k, v, causal=True)
+        win = sdpa_chunked(q, k, v, causal=True, window=4)
+        # early positions identical (window not yet binding), late differ
+        np.testing.assert_allclose(np.asarray(full[:, :4]),
+                                   np.asarray(win[:, :4]), rtol=1e-5, atol=1e-5)
+        assert float(jnp.abs(full[:, -1] - win[:, -1]).max()) > 1e-4
+
+    def test_mla_cache_is_latent_sized(self):
+        """MLA's whole point: cache stores kv_lora + rope_dim per token,
+        not num_heads * head_dim * 2."""
+        cfg = get_arch("deepseek-v2-lite-16b")
+        cache = jax.eval_shape(lambda: init_cache(cfg, 1, 1024))
+        leaves = jax.tree_util.tree_leaves(cache.layers)
+        per_token = sum(np.prod(l.shape) for l in leaves
+                        if l.ndim >= 3) / cfg.num_layers / 1024
+        gqa_equiv = 2 * cfg.num_kv_heads * cfg.hd
+        assert per_token == cfg.mla.kv_lora + cfg.mla.rope_dim
+        assert per_token < gqa_equiv / 5
+
+    def test_rope_relative_shift_invariance(self):
+        from repro.models.common import apply_rope
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 32))
+        p0 = jnp.arange(8)[None]
+        q0 = apply_rope(x, p0)
+        q5 = apply_rope(x, p0 + 5)
+        # dot products between positions i,j depend only on i-j
+        d0 = jnp.einsum("bshd,bthd->bhst", q0, q0)
+        d5 = jnp.einsum("bshd,bthd->bhst", q5, q5)
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d5),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_mrope_text_only_reduces_to_rope(self):
+        from repro.models.common import apply_mrope, apply_rope
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 32))
+        pos = jnp.arange(8)[None]
+        pos3 = jnp.broadcast_to(pos[None], (3, 1, 8))
+        np.testing.assert_allclose(
+            np.asarray(apply_mrope(x, pos3, (5, 5, 6))),
+            np.asarray(apply_rope(x, pos)), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,102 @@
+"""Communication performance model (paper Eqns 2-8, Fig 7)."""
+
+import numpy as np
+import pytest
+
+from repro.core.perf_model import (
+    ABCI_XEON,
+    FUGAKU_A64FX,
+    TPU_V5E,
+    comm_time,
+    delta_ratio,
+    epoch_time_model,
+    quant_comm_time,
+    speedup_model,
+)
+
+
+class TestSpeedupModel:
+    def test_throughput_bound_limit(self):
+        """delta -> 0 (medium scale): speedup approaches gamma (Fig 7 left)."""
+        gamma = 16.0  # int2
+        # alpha*beta must dominate the quant/dequant overhead terms for the
+        # approximation speedup ~ gamma to hold (paper's O(10^2) regime is
+        # borderline: alpha=beta=100 gives ~10.7x).
+        s = speedup_model(alpha=1000.0, beta=1000.0, gamma=gamma, delta=1e-9)
+        assert 0.9 * gamma < s <= gamma
+        s_small = speedup_model(alpha=100.0, beta=100.0, gamma=gamma, delta=1e-9)
+        assert 1 < s_small < s
+
+    def test_latency_bound_limit(self):
+        """delta -> inf (extreme scale): speedup -> 1, never negative."""
+        s = speedup_model(alpha=100.0, beta=100.0, gamma=16.0, delta=1e6)
+        assert 0.99 < s < 1.05
+
+    def test_monotone_in_delta(self):
+        deltas = [1e-3, 1e-1, 1.0, 10.0, 1e3]
+        ss = [speedup_model(100, 100, 16, d) for d in deltas]
+        assert all(a >= b - 1e-9 for a, b in zip(ss, ss[1:]))
+        assert all(s >= 0.99 for s in ss)  # "does not have negative impact"
+
+    def test_more_bits_less_speedup(self):
+        s2 = speedup_model(100, 100, 32 / 2, 0.01)
+        s8 = speedup_model(100, 100, 32 / 8, 0.01)
+        assert s2 > s8 > 1
+
+
+class TestCommTime:
+    def _volumes(self, p=8, rows=1000):
+        rng = np.random.default_rng(0)
+        v = rng.integers(0, rows, (p, p)).astype(float)
+        np.fill_diagonal(v, 0)
+        return v
+
+    def test_bottleneck_worker_selected(self):
+        v = np.zeros((4, 4))
+        v[2, :] = 1000  # worker 2 sends a lot
+        v[2, 2] = 0     # no self-communication
+        t = comm_time(v, 256, ABCI_XEON)
+        t_row2 = (1000 * 256 * 4 / ABCI_XEON.bw_comm + ABCI_XEON.latency) * 3
+        np.testing.assert_allclose(t, t_row2, rtol=1e-6)
+
+    def test_quantized_comm_is_faster_at_scale(self):
+        v = self._volumes()
+        sub = np.full(8, 5000.0)
+        t32 = comm_time(v, 256, FUGAKU_A64FX)
+        tq = quant_comm_time(v, 256, FUGAKU_A64FX, 2, sub)
+        assert tq < t32
+
+    def test_delta_grows_with_scale(self):
+        """Fixed total volume split over more workers -> larger delta."""
+        d_small = delta_ratio(10000, 256, 2, FUGAKU_A64FX)
+        d_large = delta_ratio(100, 256, 2, FUGAKU_A64FX)
+        assert d_large > d_small
+
+
+class TestEpochModel:
+    def test_components_positive_and_sum(self):
+        p = 8
+        rng = np.random.default_rng(1)
+        v = rng.integers(0, 500, (p, p)).astype(float)
+        np.fill_diagonal(v, 0)
+        local = rng.integers(1000, 5000, p).astype(float)
+        owned = rng.integers(500, 1500, p).astype(float)
+        for bits in (0, 2):
+            br = epoch_time_model(v, local, owned, 128, 256, 3,
+                                  FUGAKU_A64FX, bits=bits)
+            assert all(x >= 0 for x in br.values())
+            np.testing.assert_allclose(
+                br["total"],
+                br["aggr"] + br["nn"] + br["comm"] + br["quant"] + br["sync"],
+                rtol=1e-9)
+
+    def test_quantization_reduces_comm_component(self):
+        p = 16
+        rng = np.random.default_rng(2)
+        v = rng.integers(100, 2000, (p, p)).astype(float)
+        np.fill_diagonal(v, 0)
+        local = np.full(p, 3000.0)
+        owned = np.full(p, 1000.0)
+        b32 = epoch_time_model(v, local, owned, 256, 256, 3, FUGAKU_A64FX, 0)
+        b2 = epoch_time_model(v, local, owned, 256, 256, 3, FUGAKU_A64FX, 2)
+        assert b2["comm"] < b32["comm"] / 8  # ~16x data reduction

@@ -1,0 +1,74 @@
+"""Stochastic quantization (paper §2.4, §6): properties + wire accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    dequantize,
+    dequantize_packed,
+    quantize,
+    quantize_packed,
+    wire_bytes,
+)
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_error_bounded_by_step(self, bits):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 128)) * 4
+        q, params = quantize(x, bits, jax.random.PRNGKey(1))
+        xd = dequantize(q, params)
+        err = jnp.abs(xd - x).reshape(16, -1).max(axis=1)
+        np.testing.assert_array_less(np.asarray(err),
+                                     np.asarray(params.scale) + 1e-6)
+
+    def test_quant_levels_in_range(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (16, 64))
+        for bits in (2, 4, 8):
+            q, _ = quantize(x, bits, jax.random.PRNGKey(3))
+            assert int(q.min()) >= 0
+            assert int(q.max()) <= (1 << bits) - 1
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.sampled_from([2, 4, 8]), st.integers(0, 10**6))
+    def test_packed_roundtrip_equals_unpacked(self, bits, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (8, 32)) * 2
+        key = jax.random.PRNGKey(seed + 1)
+        q, p1 = quantize(x, bits, key)
+        packed, p2 = quantize_packed(x, bits, key)
+        np.testing.assert_allclose(np.asarray(dequantize(q, p1)),
+                                   np.asarray(dequantize_packed(packed, p2, bits, 32)),
+                                   rtol=1e-6)
+
+    def test_decentralized_no_cross_group_dependence(self):
+        """Changing one row group's data must not affect another group's
+        params (decentralized scheme, §7.3(1))."""
+        x = jax.random.normal(jax.random.PRNGKey(4), (16, 32))
+        _, p1 = quantize(x, 2, jax.random.PRNGKey(5))
+        x2 = x.at[0:4].mul(100.0)  # perturb group 0 only
+        _, p2 = quantize(x2, 2, jax.random.PRNGKey(5))
+        np.testing.assert_allclose(np.asarray(p1.zero[1:]),
+                                   np.asarray(p2.zero[1:]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(p1.scale[1:]),
+                                   np.asarray(p2.scale[1:]), rtol=1e-6)
+
+
+class TestWireAccounting:
+    def test_int2_reduction_factor(self):
+        """Paper §6.2: Int2 cuts data volume 16x; params add the Eqn-5 term."""
+        rows, feat = 1024, 256
+        fp32 = rows * feat * 4
+        int2 = wire_bytes(rows, feat, 2)
+        data_only = rows * feat * 2 // 8
+        assert int2 == data_only + (rows // 4) * 8
+        assert fp32 / int2 > 15  # ~15.5x with params overhead (Table 5)
+
+    def test_alpha_ratio_magnitude(self):
+        """alpha = data/params volume ratio ~ O(10^2) for paper-like dims."""
+        rows, feat = 4096, 256
+        data = rows * feat * 2 / 8
+        params = (rows / 4) * 8
+        assert 10 < data / params < 1000
