@@ -1,0 +1,16 @@
+# Tier-1 verification (same command as ROADMAP.md).
+PY ?= python
+
+.PHONY: check check-fast bench-comm
+
+check:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
+
+# Skip the slow subprocess dry-run compile (~2 min) for quick iteration.
+check-fast:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q -m "not slow"
+
+bench-comm:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -c \
+		"import json, sys; sys.path.insert(0, 'benchmarks'); import comm_volume; \
+		print(json.dumps(comm_volume.run(), indent=1))"

@@ -4,6 +4,10 @@ under pre / post / hybrid / hybrid+Int2, on a partitioned R-MAT graph.
 Paper numbers (mag240M, 2048 procs): pre=post=1934.9GB, hybrid=1269.6GB
 (1.52x), +Int2 -> 80.5GB data + 1.65GB params (~15.5x more). The
 reproduction targets the ratios.
+
+Also reports the hierarchical (two-level) split: rows that stay on the
+fast intra-group exchange vs rows crossing groups, flat and after the
+per-group aggregation step (paper contribution 2).
 """
 
 from __future__ import annotations
@@ -11,7 +15,11 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.perf_model import FUGAKU_A64FX, comm_time
-from repro.graph import build_partitioned_graph, rmat_graph
+from repro.graph import (
+    build_hierarchical_partitioned_graph,
+    build_partitioned_graph,
+    rmat_graph,
+)
 from repro.quant import wire_bytes
 
 
@@ -61,4 +69,53 @@ def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256) -> list:
                     f"{s.hybrid * feat_dim * 4 / wire_bytes(s.hybrid, feat_dim, 2):.1f}x,"
                     f"paper=1.52x,15.5x"),
     })
+    if nparts % 4 == 0:  # two-level split needs nparts = groups x 4
+        rows.extend(run_hierarchical(g, nparts, feat_dim))
     return rows
+
+
+def run_hierarchical(g=None, nparts: int = 16, feat_dim: int = 256,
+                     group_size: int = 4, scale: int = 13) -> list:
+    """Two-level split on the same graph: intra rows stay on the fast
+    fabric; inter rows shrink via group-level dedup/merge."""
+    if g is None:
+        g = rmat_graph(scale, edge_factor=8, seed=1)
+    if group_size < 1 or nparts % group_size or nparts < group_size:
+        raise ValueError(
+            f"nparts ({nparts}) must be a positive multiple of group_size "
+            f"({group_size}) so the two-level rows compare to the flat rows")
+    num_groups = nparts // group_size
+    hpg = build_hierarchical_partitioned_graph(
+        g, num_groups, group_size, strategy="hybrid", seed=0)
+    s = hpg.stats
+    hw = FUGAKU_A64FX
+
+    def gb(rows_count, bits=32):
+        return rows_count * feat_dim * bits / 8 / 1e9
+
+    # Inter-group traffic is the scaling bottleneck: model it at the full
+    # (slow) wire bandwidth; intra-group rides the in-node fabric.
+    t_flat_inter = s.flat_inter_rows * feat_dim * 4 / hw.bw_comm
+    t_hier_inter = s.inter_rows * feat_dim * 4 / hw.bw_comm
+    return [
+        {
+            "name": f"comm_volume_hier/{num_groups}x{group_size}_intra",
+            "us_per_call": 0.0,
+            "derived": f"volume_gb={gb(s.intra_rows):.4f}",
+        },
+        {
+            "name": f"comm_volume_hier/{num_groups}x{group_size}_inter_flat",
+            "us_per_call": round(t_flat_inter * 1e6, 1),
+            "derived": f"volume_gb={gb(s.flat_inter_rows):.4f}",
+        },
+        {
+            "name": f"comm_volume_hier/{num_groups}x{group_size}_inter_2level",
+            "us_per_call": round(t_hier_inter * 1e6, 1),
+            "derived": f"volume_gb={gb(s.inter_rows):.4f}",
+        },
+        {
+            "name": "comm_volume_hier/ratios",
+            "us_per_call": 0.0,
+            "derived": f"inter_savings={s.inter_savings():.2f}x",
+        },
+    ]

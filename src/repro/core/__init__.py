@@ -8,9 +8,19 @@ from repro.core.trainer import (
     prepare_single,
     train_gcn_single,
 )
-from repro.core.halo import DeviceHaloPlan, aggregate_with_halo, halo_exchange
+from repro.core.halo import (
+    DeviceHaloPlan,
+    DeviceHierPlan,
+    aggregate_with_halo,
+    aggregate_with_halo_hierarchical,
+    halo_exchange,
+    halo_exchange_hierarchical,
+)
 
 __all__ = [
+    "DeviceHierPlan",
+    "aggregate_with_halo_hierarchical",
+    "halo_exchange_hierarchical",
     "GCNConfig",
     "forward",
     "init_params",

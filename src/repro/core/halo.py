@@ -17,12 +17,43 @@ the named-axis collective semantics.
 Backward pass: the VJP of the exchange is the reverse exchange; with
 quantization enabled the cotangents are quantized too (the paper's Lemma 1
 covers this — stochastic rounding keeps the gradient unbiased).
+
+Hierarchical (two-level) exchange — the paper's contribution (2)
+----------------------------------------------------------------
+
+A flat ``all_to_all`` across all P workers does not strong-scale: every
+worker exchanges with every other, and most of those pairs cross the slow
+inter-node network. ``halo_exchange_hierarchical`` maps P = G x W workers
+onto two named axes — ``group_axis`` (G groups = physical nodes, slow
+links) and ``node_axis`` (W workers inside a node, fast links) — and runs:
+
+  1. **intra level** — a flat all_to_all over ``node_axis`` for same-group
+     pairs (W chunks, identical machinery to the flat exchange);
+  2. **inter level** — each worker assembles its additive contribution to
+     the *group* send buffer (G chunks, one per destination group, built
+     from the group-level MVC classification in ``graph.remote``), then:
+     ``psum_scatter`` over ``node_axis`` (the per-group aggregation step:
+     partials destined for the same remote row merge here, and the buffer
+     lands sharded 1/W per worker) -> ``all_to_all`` over ``group_axis``
+     (the only traffic on the slow network — each worker carries 1/W of its
+     group's deduplicated rows) -> ``all_gather`` over ``node_axis`` (fan
+     the received group buffers out to the destination workers).
+
+The inter pipeline is self-transpose (reduce-scatter^T = all-gather,
+all_to_all^T = all_to_all), so the quantized custom VJP simply re-applies
+the same exchange to the cotangents, mirroring the flat quantized path.
+Group-level classification both *dedups* raw post rows across the
+destination group's workers (a hub source crossing to 3 workers of one
+node crosses once, not 3x) and *merges* pre-aggregated partials across the
+source group's senders — inter-group volume is strictly below the flat
+cross-group volume whenever any source or destination touches more than
+one worker of a remote group (always, on power-law graphs).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -155,3 +186,160 @@ def aggregate_with_halo(
     """local aggregation + remote pre/post contributions -> full AGGREGATE."""
     recv = halo_exchange(h, plan, axis_name, nparts, bits=bits, key=key)
     return scatter_recv(local_agg, recv, plan)
+
+
+# --------------------------------------------------------------------------
+# Hierarchical two-level exchange (module docstring, "Hierarchical" section)
+# --------------------------------------------------------------------------
+
+
+class DeviceHierPlan(NamedTuple):
+    """Two DeviceHaloPlan's: intra (rank chunks) + inter (group chunks)."""
+
+    intra: DeviceHaloPlan
+    inter: DeviceHaloPlan
+
+
+def stack_hier_plan(hp) -> DeviceHierPlan:
+    """graph.remote.HierHaloPlan (host numpy) -> stacked device plan."""
+    return DeviceHierPlan(
+        intra=stack_halo_plan(hp.intra),
+        inter=stack_halo_plan(hp.inter),
+    )
+
+
+def _inter_exchange_fp32(x: jax.Array, node_axis: str, group_axis: str,
+                         group_size: int, num_groups: int) -> jax.Array:
+    """reduce-scatter(node) -> all_to_all(group) -> all_gather(node).
+
+    ``x``: this worker's additive contribution to the group send buffer,
+    [G*R_e, F]. Returns the reassembled group recv buffer, [G*R_e, F],
+    chunk gq at offset gq*R_e. Plain collectives — JAX's built-in
+    transposes give the correct (exact) VJP.
+    """
+    rows, feat = x.shape
+    slice_rows = rows // (num_groups * group_size)
+    y = x.reshape(num_groups, group_size, slice_rows, feat)
+    # Per-group aggregation: partials merge, and the group buffer lands
+    # sharded 1/W per worker — each worker fronts 1/W of the slow traffic.
+    shard = jax.lax.psum_scatter(y, node_axis, scatter_dimension=1,
+                                 tiled=False)                 # [G, Rw, F]
+    recv = jax.lax.all_to_all(shard, group_axis,
+                              split_axis=0, concat_axis=0)    # [G, Rw, F]
+    full = jax.lax.all_gather(recv, node_axis, axis=1,
+                              tiled=False)                    # [G, W, Rw, F]
+    return full.reshape(rows, feat)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _inter_exchange_quantized(x, key, node_axis, group_axis, group_size,
+                              num_groups, bits):
+    """Quantized inter level: only the slow all_to_all carries int payload.
+
+    The group buffer is quantized *after* the psum_scatter (the merged
+    partials are what crosses the network) and dequantized before the
+    intra-group all_gather fan-out.
+    """
+    rows, feat = x.shape
+    slice_rows = rows // (num_groups * group_size)
+    y = x.reshape(num_groups, group_size, slice_rows, feat)
+    shard = jax.lax.psum_scatter(y, node_axis, scatter_dimension=1,
+                                 tiled=False)                 # [G, Rw, F]
+    flat = shard.reshape(num_groups * slice_rows, feat)
+    q, params = quantize(flat, bits, key)
+
+    def a2a(v, per_chunk):
+        return jax.lax.all_to_all(v.reshape(num_groups, per_chunk, -1),
+                                  group_axis, split_axis=0, concat_axis=0)
+
+    # zero/scale are per 4-row quant group; slice_rows % 4 == 0 keeps the
+    # group boundaries aligned with the per-destination-group chunks.
+    qr = a2a(q.astype(jnp.int32), slice_rows)
+    zr = a2a(params.zero[:, None], slice_rows // 4).reshape(-1)
+    sr = a2a(params.scale[:, None], slice_rows // 4).reshape(-1)
+    deq = dequantize(qr.reshape(num_groups * slice_rows, feat),
+                     QuantParams(zr, sr))
+    recv = deq.reshape(num_groups, slice_rows, feat)
+    full = jax.lax.all_gather(recv, node_axis, axis=1, tiled=False)
+    return full.reshape(rows, feat)
+
+
+def _inter_exchange_quantized_fwd(x, key, node_axis, group_axis, group_size,
+                                  num_groups, bits):
+    out = _inter_exchange_quantized(x, key, node_axis, group_axis,
+                                    group_size, num_groups, bits)
+    return out, key
+
+
+def _inter_exchange_quantized_bwd(node_axis, group_axis, group_size,
+                                  num_groups, bits, key, g):
+    # The fp32 inter pipeline is self-transpose (RS^T = AG, A2A^T = A2A),
+    # so the reverse exchange IS the same exchange — quantized cotangents
+    # stay unbiased per Lemma 1, mirroring the flat quantized path.
+    gkey = jax.random.fold_in(key, 0x9e37)
+    gq = _inter_exchange_quantized(g, gkey, node_axis, group_axis,
+                                   group_size, num_groups, bits)
+    return gq, None
+
+
+_inter_exchange_quantized.defvjp(_inter_exchange_quantized_fwd,
+                                 _inter_exchange_quantized_bwd)
+
+
+def halo_exchange_hierarchical(
+    h: jax.Array,
+    plan: DeviceHierPlan,
+    node_axis: str,
+    group_axis: str,
+    group_size: int,
+    num_groups: int,
+    *,
+    bits: int = 0,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Two-level exchange. Returns (intra recv buffer, inter recv buffer).
+
+    Intra recv is [W*R_i, F] (chunk per same-group sender rank); inter recv
+    is [G*R_e, F] (chunk per source group). ``bits`` quantizes both wires:
+    the intra all_to_all via the flat quantized path and the inter
+    all_to_all via the group-aggregated quantized path.
+    """
+    send_i = assemble_send(h, plan.intra)
+    send_e = assemble_send(h, plan.inter)
+    if bits == 0:
+        recv_i = _a2a(send_i, node_axis, group_size)
+        recv_e = _inter_exchange_fp32(send_e, node_axis, group_axis,
+                                      group_size, num_groups)
+        return recv_i, recv_e
+    if key is None:
+        raise ValueError("quantized hierarchical halo exchange needs a PRNG key")
+    if (send_i.shape[0] // group_size) % 4:
+        raise ValueError("intra rows_per_pair must be a multiple of 4")
+    if (send_e.shape[0] // (num_groups * group_size)) % 4:
+        raise ValueError("inter rows per worker slice must be a multiple of 4")
+    ki = jax.random.fold_in(key, 1)
+    ke = jax.random.fold_in(key, 2)
+    recv_i = _quantized_a2a(send_i, ki, node_axis, group_size, bits)
+    recv_e = _inter_exchange_quantized(send_e, ke, node_axis, group_axis,
+                                       group_size, num_groups, bits)
+    return recv_i, recv_e
+
+
+def aggregate_with_halo_hierarchical(
+    h: jax.Array,
+    local_agg: jax.Array,
+    plan: DeviceHierPlan,
+    node_axis: str,
+    group_axis: str,
+    group_size: int,
+    num_groups: int,
+    *,
+    bits: int = 0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """local aggregation + two-level remote contributions -> full AGGREGATE."""
+    recv_i, recv_e = halo_exchange_hierarchical(
+        h, plan, node_axis, group_axis, group_size, num_groups,
+        bits=bits, key=key)
+    acc = scatter_recv(local_agg, recv_i, plan.intra)
+    return scatter_recv(acc, recv_e, plan.inter)

@@ -20,6 +20,7 @@ buffers for N-1 epochs — the paper's ABCI comparison target.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Dict, List, NamedTuple, Optional, Tuple
@@ -31,13 +32,21 @@ import numpy as np
 from repro.core import model as M
 from repro.core.halo import (
     DeviceHaloPlan,
+    DeviceHierPlan,
     aggregate_with_halo,
+    aggregate_with_halo_hierarchical,
     halo_exchange,
     scatter_recv,
     stack_halo_plan,
+    stack_hier_plan,
 )
 from repro.core.layers import gat_aggregate
-from repro.graph.remote import PartitionedGraph, build_halo_plan
+from repro.graph.remote import (
+    HierPartitionedGraph,
+    PartitionedGraph,
+    build_halo_plan,
+    build_hier_halo_plan,
+)
 from repro.graph.structure import Graph, ell_from_csr
 from repro.kernels import aggregate as kernel_aggregate
 from repro.kernels.ref import seg_aggregate_ref
@@ -141,7 +150,12 @@ def train_gcn_single(g: Graph, x: np.ndarray, cfg: M.GCNConfig, epochs: int,
 
 
 class WorkerData(NamedTuple):
-    """Per-worker arrays; in the stacked form every field has leading dim P."""
+    """Per-worker arrays; in the stacked form every field has leading dim P.
+
+    Exactly one of ``plan`` (flat exchange) / ``hier_plan`` (two-level
+    exchange) is set; ``None`` fields carry no leaves, so vmap/shard_map
+    tree-mapping skips them.
+    """
 
     x: jax.Array           # [M, F] padded owned features
     labels: jax.Array      # [M]
@@ -151,7 +165,8 @@ class WorkerData(NamedTuple):
     coo_src: jax.Array     # [nnz] local COO aggregation graph
     coo_dst: jax.Array     # [nnz]
     coo_w: jax.Array       # [nnz] (0 on padding)
-    plan: DeviceHaloPlan
+    plan: Optional[DeviceHaloPlan] = None
+    hier_plan: Optional[DeviceHierPlan] = None
 
 
 @dataclass(frozen=True)
@@ -161,12 +176,42 @@ class DistConfig:
     bits: int = 0            # wire format: 0=fp32, 2=Int2 (paper), 4, 8
     cd: int = 1              # delayed-comm period (DistGNN baseline; 1 = sync)
     lr: float = 0.01
+    # Two-level (hierarchical) exchange: nparts = num_groups * group_size
+    # workers on nested axes (group_axis outer, node_axis inner). 0 = flat.
+    num_groups: int = 0
+    group_size: int = 0
+    node_axis: str = "node"
+    group_axis: str = "group"
+
+    def __post_init__(self):
+        if self.num_groups or self.group_size:
+            if self.num_groups < 1 or self.group_size < 1:
+                raise ValueError(
+                    "hierarchical DistConfig needs both num_groups >= 1 and "
+                    f"group_size >= 1, got {self.num_groups}x{self.group_size}")
+            if self.num_groups * self.group_size != self.nparts:
+                raise ValueError(
+                    f"num_groups * group_size ({self.num_groups}x"
+                    f"{self.group_size}) must equal nparts ({self.nparts})")
+
+    @property
+    def hierarchical(self) -> bool:
+        # num_groups=1 is the degenerate-but-valid G=1 endpoint of a G x W
+        # sweep: the inter level is an identity exchange over a size-1 axis.
+        return self.num_groups >= 1 and self.group_size >= 1
+
+    @property
+    def psum_axes(self):
+        """Axis name(s) spanning all workers, for grad/metric reductions."""
+        if self.hierarchical:
+            return (self.node_axis, self.group_axis)
+        return self.axis_name
 
 
 def prepare_distributed(
     g: Graph,
     x: np.ndarray,
-    pg: PartitionedGraph,
+    pg,
     eval_mask: Optional[np.ndarray] = None,
     norm_applied: bool = True,
 ) -> WorkerData:
@@ -174,6 +219,9 @@ def prepare_distributed(
 
     ``g`` must already carry edge weights (use gcn_normalized/mean_normalized
     *before* partitioning so pre-aggregation applies source-side weights).
+    ``pg`` may be a flat ``PartitionedGraph`` (flat plan) or a
+    ``HierPartitionedGraph`` (two-level plan; ``hier_plan`` is set instead
+    of ``plan``).
     """
     P = pg.nparts
     M_ = pg.max_owned
@@ -206,17 +254,21 @@ def prepare_distributed(
         cd_[p, :c.nnz] = dst
         cw[p, :c.nnz] = c.weights
 
-    # Pad wire rows per pair to a multiple of the quant row group (4).
-    R = pg.stats.padded_rows_per_pair
-    R = max(4, (R + 3) // 4 * 4)
-    hp = build_halo_plan(pg, rows_per_pair=R)
-    return WorkerData(
+    common = dict(
         x=jnp.asarray(xs), labels=jnp.asarray(ls), train_mask=jnp.asarray(tm),
         eval_mask=jnp.asarray(em), owned_mask=jnp.asarray(om),
         coo_src=jnp.asarray(cs, jnp.int32), coo_dst=jnp.asarray(cd_, jnp.int32),
         coo_w=jnp.asarray(cw),
-        plan=stack_halo_plan(hp),
     )
+    if isinstance(pg, HierPartitionedGraph):
+        # build_hier_halo_plan already pads both levels to quant row groups.
+        return WorkerData(**common, hier_plan=stack_hier_plan(
+            build_hier_halo_plan(pg)))
+    # Pad wire rows per pair to a multiple of the quant row group (4).
+    R = pg.stats.padded_rows_per_pair
+    R = max(4, (R + 3) // 4 * 4)
+    hp = build_halo_plan(pg, rows_per_pair=R)
+    return WorkerData(**common, plan=stack_halo_plan(hp))
 
 
 def _local_aggregate(h: jax.Array, wd: WorkerData) -> jax.Array:
@@ -236,7 +288,12 @@ def _dist_forward(params, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
         def agg_fn(l: int, h: jax.Array) -> jax.Array:
             local = _local_aggregate(h, wd)
             kq = jax.random.fold_in(key, 7919 + l) if key is not None else None
-            if halo_cache is None:
+            if dc.hierarchical:
+                agg = aggregate_with_halo_hierarchical(
+                    h, local, wd.hier_plan, dc.node_axis, dc.group_axis,
+                    dc.group_size, dc.num_groups, bits=dc.bits, key=kq)
+                new_cache.append(jnp.zeros((0,)))
+            elif halo_cache is None:
                 agg = aggregate_with_halo(h, local, wd.plan, dc.axis_name,
                                           dc.nparts, bits=dc.bits, key=kq)
                 new_cache.append(jnp.zeros((0,)))
@@ -262,7 +319,11 @@ def make_dist_train_step(cfg: M.GCNConfig, dc: DistConfig, use_cache: bool = Fal
     """Returns worker_fn(params, wd, key[, cache, refresh]) -> (grads, metrics[, cache])."""
 
     def worker_fn(params, wd: WorkerData, key, cache=None, refresh=None):
-        widx = jax.lax.axis_index(dc.axis_name)
+        if dc.hierarchical:
+            widx = (jax.lax.axis_index(dc.group_axis) * dc.group_size
+                    + jax.lax.axis_index(dc.node_axis))
+        else:
+            widx = jax.lax.axis_index(dc.axis_name)
         kw = jax.random.fold_in(key, widx)
         kp = jax.random.fold_in(kw, 1)
         prop_mask, loss_mask = M.lp_masks(kp, wd.train_mask, cfg.lp_rate)
@@ -278,14 +339,14 @@ def make_dist_train_step(cfg: M.GCNConfig, dc: DistConfig, use_cache: bool = Fal
             cache_out.extend(nc)
             ls, correct, cnt = M.loss_and_metrics(logits, wd.labels, loss_mask)
             # Global mean loss: psum both numerator and denominator.
-            gls = jax.lax.psum(ls, dc.axis_name)
-            gcnt = jax.lax.psum(cnt, dc.axis_name)
+            gls = jax.lax.psum(ls, dc.psum_axes)
+            gcnt = jax.lax.psum(cnt, dc.psum_axes)
             return gls / jnp.maximum(gcnt, 1.0), (correct, cnt)
 
         (loss, (correct, cnt)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        grads = jax.lax.psum(grads, dc.axis_name)
-        gcorrect = jax.lax.psum(correct, dc.axis_name)
-        gcnt = jax.lax.psum(cnt, dc.axis_name)
+        grads = jax.lax.psum(grads, dc.psum_axes)
+        gcorrect = jax.lax.psum(correct, dc.psum_axes)
+        gcnt = jax.lax.psum(cnt, dc.psum_axes)
         metrics = {"loss": loss, "train_acc": gcorrect / jnp.maximum(gcnt, 1.0)}
         if use_cache:
             return grads, metrics, cache_out
@@ -298,12 +359,12 @@ def make_dist_eval(cfg: M.GCNConfig, dc: DistConfig):
     def worker_fn(params, wd: WorkerData):
         prop = wd.train_mask if cfg.label_prop else jnp.zeros_like(wd.train_mask)
         # Eval always uses fp32 fresh halo (accuracy measurement).
-        dc_eval = DistConfig(nparts=dc.nparts, axis_name=dc.axis_name, bits=0)
+        dc_eval = dataclasses.replace(dc, bits=0, cd=1)
         logits, _ = _dist_forward(params, cfg, dc_eval, wd, prop,
                                   jax.random.PRNGKey(0), False)
         _, correct, cnt = M.loss_and_metrics(logits, wd.labels, wd.eval_mask)
-        return (jax.lax.psum(correct, dc.axis_name),
-                jax.lax.psum(cnt, dc.axis_name))
+        return (jax.lax.psum(correct, dc.psum_axes),
+                jax.lax.psum(cnt, dc.psum_axes))
     return worker_fn
 
 
@@ -318,10 +379,33 @@ class DistributedTrainer:
         self.epoch = 0
         self.use_cache = dc.cd > 1
         self._cache = None
+        if dc.hierarchical and wd.hier_plan is None:
+            raise ValueError(
+                "hierarchical DistConfig needs WorkerData built from a "
+                "HierPartitionedGraph (wd.hier_plan is None)")
+        if not dc.hierarchical and wd.plan is None:
+            raise ValueError(
+                "WorkerData carries a hierarchical plan; set num_groups/"
+                "group_size on DistConfig (wd.plan is None)")
+        if self.use_cache and dc.hierarchical:
+            raise NotImplementedError(
+                "delayed-comm (cd>1) currently runs on the flat exchange only")
         worker_step = make_dist_train_step(cfg, dc, use_cache=self.use_cache)
         worker_eval = make_dist_eval(cfg, dc)
 
-        if mode == "vmap":
+        if dc.hierarchical and mode == "vmap":
+            # Virtual two-level mesh: workers [P, ...] -> [G, W, ...] and a
+            # nested vmap gives the (group_axis, node_axis) named axes.
+            G, W = dc.num_groups, dc.group_size
+            self.wd = jax.tree_util.tree_map(
+                lambda a: a.reshape(G, W, *a.shape[1:]), wd)
+            self._step = jax.jit(jax.vmap(jax.vmap(
+                worker_step, axis_name=dc.node_axis, in_axes=(None, 0, None)),
+                axis_name=dc.group_axis, in_axes=(None, 0, None)))
+            self._eval = jax.jit(jax.vmap(jax.vmap(
+                worker_eval, axis_name=dc.node_axis, in_axes=(None, 0)),
+                axis_name=dc.group_axis, in_axes=(None, 0)))
+        elif mode == "vmap":
             if self.use_cache:
                 self._step = jax.jit(jax.vmap(
                     worker_step, axis_name=dc.axis_name,
@@ -337,7 +421,13 @@ class DistributedTrainer:
             if mesh is None:
                 raise ValueError("shard_map mode needs a mesh")
             self.mesh = mesh
-            spec_data = jax.tree_util.tree_map(lambda _: P(dc.axis_name), wd)
+            if dc.hierarchical:
+                # Physical two-level mesh: leading worker dim sharded over
+                # (group_axis, node_axis) — e.g. make_hier_worker_mesh.
+                data_axes = (dc.group_axis, dc.node_axis)
+            else:
+                data_axes = dc.axis_name
+            spec_data = jax.tree_util.tree_map(lambda _: P(data_axes), wd)
             if self.use_cache:
                 raise NotImplementedError("cd>1 currently runs in vmap mode")
 
@@ -363,6 +453,8 @@ class DistributedTrainer:
 
     def _unreplicate(self, tree):
         if self.mode == "vmap":
+            if self.dc.hierarchical:
+                return jax.tree_util.tree_map(lambda x: x[0, 0], tree)
             return jax.tree_util.tree_map(lambda x: x[0], tree)
         return tree
 

@@ -1,11 +1,22 @@
 from repro.graph.structure import CSR, Graph, coo_to_csr
 from repro.graph.generators import rmat_graph, sbm_graph, erdos_graph
-from repro.graph.partition import partition_graph, cut_edges, partition_stats
+from repro.graph.partition import (
+    cut_edges,
+    group_of,
+    partition_graph,
+    partition_hierarchical,
+    partition_stats,
+)
 from repro.graph.mvc import hopcroft_karp, min_vertex_cover_bipartite
 from repro.graph.remote import (
     CommStats,
+    GroupPairPlan,
     HaloPlan,
+    HierHaloPlan,
+    HierPartitionedGraph,
     PartitionedGraph,
+    build_hier_halo_plan,
+    build_hierarchical_partitioned_graph,
     build_partitioned_graph,
 )
 
@@ -17,12 +28,19 @@ __all__ = [
     "sbm_graph",
     "erdos_graph",
     "partition_graph",
+    "partition_hierarchical",
+    "group_of",
     "cut_edges",
     "partition_stats",
     "hopcroft_karp",
     "min_vertex_cover_bipartite",
     "CommStats",
+    "GroupPairPlan",
     "HaloPlan",
+    "HierHaloPlan",
+    "HierPartitionedGraph",
     "PartitionedGraph",
+    "build_hier_halo_plan",
+    "build_hierarchical_partitioned_graph",
     "build_partitioned_graph",
 ]

@@ -147,6 +147,63 @@ def partition_graph(
     return part.astype(np.int32)
 
 
+def partition_hierarchical(
+    g: Graph,
+    num_groups: int,
+    group_size: int,
+    node_weights: Optional[np.ndarray] = None,
+    imbalance: float = 1.05,
+    refine_passes: int = 4,
+    seed: int = 0,
+) -> np.ndarray:
+    """Two-level worker labels: worker ``p`` lives in group ``p // group_size``.
+
+    The paper's hierarchical aggregation maps workers onto the machine
+    topology (e.g. 16 sockets per node): first a ``num_groups``-way min-cut
+    partition assigns every node to a group (inter-node cut is the expensive
+    one), then each group's induced subgraph is partitioned ``group_size``
+    ways for the sockets inside the node. Worker id = group * group_size +
+    within-group rank, so ``part // group_size`` recovers the group label.
+    """
+    if num_groups <= 1:
+        return partition_graph(g, group_size, node_weights, imbalance,
+                               refine_passes, seed)
+    top = partition_graph(g, num_groups, node_weights, imbalance,
+                          refine_passes, seed)
+    if node_weights is not None:
+        node_weights = np.asarray(node_weights, np.float64)
+    part = np.zeros(g.num_nodes, dtype=np.int32)
+    for gi in range(num_groups):
+        nodes = np.where(top == gi)[0]
+        if len(nodes) == 0:
+            continue
+        if group_size <= 1:
+            part[nodes] = gi * group_size
+            continue
+        # Induced subgraph (intra-group edges only), reindexed to [0, n_g).
+        sub_index = np.full(g.num_nodes, -1, dtype=np.int64)
+        sub_index[nodes] = np.arange(len(nodes))
+        sel = (top[g.src] == gi) & (top[g.dst] == gi)
+        sub = Graph(
+            len(nodes),
+            sub_index[g.src[sel]].astype(g.src.dtype),
+            sub_index[g.dst[sel]].astype(g.dst.dtype),
+            g.edge_weight[sel] if g.edge_weight is not None else None,
+            g.labels[nodes] if g.labels is not None else None,
+            g.train_mask[nodes] if g.train_mask is not None else None,
+        )
+        sub_w = node_weights[nodes] if node_weights is not None else None
+        sub_part = partition_graph(sub, group_size, sub_w, imbalance,
+                                   refine_passes, seed + 7919 * (gi + 1))
+        part[nodes] = gi * group_size + sub_part
+    return part
+
+
+def group_of(part: np.ndarray, group_size: int) -> np.ndarray:
+    """Worker labels -> group labels for a hierarchical partition."""
+    return np.asarray(part) // group_size
+
+
 def cut_edges(g: Graph, part: np.ndarray) -> np.ndarray:
     """Boolean mask over edges whose endpoints live in different parts."""
     return part[g.src] != part[g.dst]

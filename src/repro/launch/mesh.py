@@ -19,3 +19,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_worker_mesh(nworkers: int, axis: str = "workers"):
     """1-D graph-parallel mesh for the distributed GCN trainer."""
     return jax.make_mesh((nworkers,), (axis,))
+
+
+def make_hier_worker_mesh(num_groups: int, group_size: int,
+                          group_axis: str = "group", node_axis: str = "node"):
+    """2-D mesh for the two-level halo exchange: (groups, workers-per-group).
+
+    The inner (node) axis should map to devices sharing the fast fabric
+    (sockets of one node); jax.make_mesh's default device assignment keeps
+    the trailing axis innermost, which matches typical process layouts.
+    """
+    return jax.make_mesh((num_groups, group_size), (group_axis, node_axis))

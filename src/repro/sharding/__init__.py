@@ -1,3 +1,4 @@
+from repro.sharding.compat import abstract_mesh, axis_size, mesh_context
 from repro.sharding.specs import (
     batch_spec,
     cache_specs,
@@ -6,4 +7,13 @@ from repro.sharding.specs import (
     spec_for_array,
 )
 
-__all__ = ["param_specs", "batch_spec", "cache_specs", "data_axes", "spec_for_array"]
+__all__ = [
+    "param_specs",
+    "batch_spec",
+    "cache_specs",
+    "data_axes",
+    "spec_for_array",
+    "abstract_mesh",
+    "axis_size",
+    "mesh_context",
+]

@@ -1,0 +1,56 @@
+"""JAX version compatibility shims for mesh / named-axis APIs.
+
+The repo targets the container's pinned JAX (0.4.x today) but the newer
+API names keep appearing in examples and reviews; every drift so far has
+been one of the three below. Each helper prefers the modern spelling and
+falls back to the 0.4.x one, so call sites stay version-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named axis, inside vmap/shard_map.
+
+    ``jax.lax.axis_size`` only exists on newer JAX; ``psum(1, axis)`` of a
+    Python literal is constant-folded to a plain int on every version.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.sharding.AbstractMesh`` across the constructor change.
+
+    Newer JAX takes ``AbstractMesh(axis_sizes, axis_names)``; 0.4.x takes a
+    single tuple of ``(name, size)`` pairs.
+    """
+    sizes = tuple(int(s) for s in axis_sizes)
+    names = tuple(axis_names)
+    try:
+        return jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
+
+def mesh_context(mesh):
+    """Context manager making ``mesh`` the ambient mesh for jit lowering.
+
+    ``jax.set_mesh`` (new) > ``jax.sharding.use_mesh`` (transitional) >
+    entering the Mesh itself (0.4.x resource-env context manager).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
+def mesh_shape(mesh) -> Tuple[Tuple[str, int], ...]:
+    """(name, size) pairs for either a concrete Mesh or an AbstractMesh."""
+    return tuple((name, int(mesh.shape[name])) for name in mesh.axis_names)

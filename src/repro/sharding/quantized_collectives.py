@@ -26,10 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant.stochastic import QuantParams, dequantize, quantize
-
-
-def _axis_size(axis_name: str) -> int:
-    return jax.lax.axis_size(axis_name)
+from repro.sharding.compat import axis_size as _axis_size
 
 
 def quantized_all_to_all(x: jax.Array, axis_name: str, *, bits: int = 8,

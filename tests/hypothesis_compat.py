@@ -1,0 +1,86 @@
+"""Property-test shim: real hypothesis when installed, else a tiny fallback.
+
+The container image does not ship ``hypothesis`` (and the test env is
+offline), so the property-based modules import ``given``/``settings``/``st``
+from here. With hypothesis installed (``pip install -r requirements-dev.txt``)
+this module is a pure re-export and tests get full shrinking/replay. Without
+it, the fallback runs each property ``max_examples`` times on a deterministic
+seeded sampler supporting the subset of strategies this suite uses
+(``st.integers`` and ``st.sampled_from``). No shrinking — a failure reports
+the drawn arguments in the assertion traceback instead.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only in the bare container
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def draw(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def draw(self, rng):
+            return rng.choice(self.options)
+
+    class _St:
+        @staticmethod
+        def integers(min_value: int, max_value: int):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+    st = _St()
+
+    def settings(*, max_examples: int = 10, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # Like hypothesis, strategies fill the TRAILING parameters;
+            # leading params (self, pytest fixtures) pass through untouched.
+            sig = inspect.signature(fn)
+            tail = list(sig.parameters)[-len(strategies):]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples", 10))
+                # Deterministic per-test stream, stable across runs/processes.
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in zip(tail, strategies)}
+                    fn(*args, **kwargs, **drawn)
+            # Hide the drawn params from pytest's fixture resolution: the
+            # wrapper's visible signature keeps only the leading params
+            # (self / real fixtures), not the strategy-supplied tail.
+            params = list(sig.parameters.values())[: -len(strategies)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,0 +1,317 @@
+"""Hierarchical two-level halo aggregation (paper contribution 2).
+
+The virtual two-level mesh is a nested vmap: outer axis = group (inter-node,
+slow), inner axis = rank within group (intra-node, fast). Bit-for-bit
+equality against the flat path is asserted on integer-valued features with
+unit edge weights, where every partial sum is exact in fp32 and therefore
+independent of the association order the two plans use.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DistConfig,
+    DistributedTrainer,
+    GCNConfig,
+    init_params,
+    prepare_distributed,
+)
+from repro.core.halo import (
+    aggregate_with_halo,
+    aggregate_with_halo_hierarchical,
+    stack_halo_plan,
+    stack_hier_plan,
+)
+from repro.core.trainer import _dist_forward, _local_aggregate
+from repro.graph import (
+    build_hier_halo_plan,
+    build_hierarchical_partitioned_graph,
+    build_partitioned_graph,
+    group_of,
+    partition_hierarchical,
+    rmat_graph,
+    sbm_graph,
+)
+from repro.graph.generators import sbm_features
+from repro.graph.remote import build_halo_plan
+
+G, W = 2, 4  # acceptance setup: 2 groups x 4 workers
+P = G * W
+
+
+@pytest.fixture(scope="module")
+def rmat_setup():
+    """Power-law graph + matched flat/hierarchical partitions."""
+    g = rmat_graph(9, 6, seed=3)
+    part = partition_hierarchical(g, G, W, seed=0)
+    hpg = build_hierarchical_partitioned_graph(g, G, W, part=part,
+                                               strategy="hybrid", seed=0)
+    pgf = build_partitioned_graph(g, P, part=part, strategy="hybrid", seed=0)
+    return g, part, hpg, pgf
+
+
+def _nested(a):
+    return a.reshape(G, W, *a.shape[1:])
+
+
+def _scatter_global(pg, per_worker, n, f):
+    out = np.zeros((n, f), np.float32)
+    for p in range(pg.nparts):
+        out[pg.owned[p]] = np.asarray(per_worker[p])[: len(pg.owned[p])]
+    return out
+
+
+class TestHierPartition:
+    def test_labels_shape_and_groups(self, rmat_setup):
+        g, part, _, _ = rmat_setup
+        assert part.shape == (g.num_nodes,)
+        assert part.min() >= 0 and part.max() == P - 1
+        grp = group_of(part, W)
+        assert sorted(np.unique(grp).tolist()) == list(range(G))
+
+    def test_group_locality(self, rmat_setup):
+        """Cross-group cut must not exceed the total cross-worker cut."""
+        g, part, _, _ = rmat_setup
+        grp = group_of(part, W)
+        cross_worker = int((part[g.src] != part[g.dst]).sum())
+        cross_group = int((grp[g.src] != grp[g.dst]).sum())
+        assert 0 < cross_group < cross_worker
+
+
+class TestHierVolumes:
+    def test_inter_strictly_below_flat(self, rmat_setup):
+        """Acceptance: group-aggregated inter rows < flat cross-group rows."""
+        _, _, hpg, _ = rmat_setup
+        s = hpg.stats
+        assert s.inter_rows > 0
+        assert s.inter_rows < s.flat_inter_rows
+        assert s.inter_savings() > 1.0
+
+    def test_per_level_reporting(self, rmat_setup):
+        _, _, hpg, pgf = rmat_setup
+        d = hpg.stats.as_dict()
+        for k in ("num_groups", "group_size", "intra_rows", "inter_rows",
+                  "flat_inter_rows", "inter_savings"):
+            assert k in d, k
+        assert d["num_groups"] == G and d["group_size"] == W
+        # Flat totals must be untouched by the hierarchical extension.
+        assert d["hybrid"] == pgf.stats.hybrid
+        # Flat plans keep reporting the flat dict shape.
+        assert "inter_rows" not in pgf.stats.as_dict()
+        # intra + flat-inter partition the flat per-pair volumes.
+        flat_total = sum(pl.volume for pl in pgf.pair_plans.values())
+        assert d["intra_rows"] + d["flat_inter_rows"] == flat_total
+
+    def test_strategy_variants_build(self):
+        g = rmat_graph(8, 5, seed=11)
+        for strategy in ("pre", "post", "hybrid"):
+            hpg = build_hierarchical_partitioned_graph(
+                g, G, W, strategy=strategy, seed=1)
+            assert hpg.stats.inter_rows <= hpg.stats.flat_inter_rows
+
+
+class TestHierAggregation:
+    def _worker_inputs(self, g, pg, x):
+        M_ = pg.max_owned
+        F = x.shape[1]
+        xs = np.zeros((pg.nparts, M_, F), np.float32)
+        for p in range(pg.nparts):
+            o = pg.owned[p]
+            xs[p, : len(o)] = x[o]
+        nnz = max(max(c.nnz for c in pg.local_csr), 1)
+        cs = np.zeros((pg.nparts, nnz), np.int32)
+        cd = np.zeros((pg.nparts, nnz), np.int32)
+        cw = np.zeros((pg.nparts, nnz), np.float32)
+        for p in range(pg.nparts):
+            c = pg.local_csr[p]
+            dst = np.repeat(np.arange(c.num_rows), np.diff(c.indptr))
+            cs[p, : c.nnz] = c.indices
+            cd[p, : c.nnz] = dst
+            cw[p, : c.nnz] = c.weights
+        return jnp.asarray(xs), jnp.asarray(cs), jnp.asarray(cd), jnp.asarray(cw)
+
+    def _run_flat(self, pg, xs, cs, cd, cw):
+        plan = stack_halo_plan(build_halo_plan(pg))
+
+        def worker(h, pl, s, d, w):
+            local = jnp.zeros_like(h).at[d].add(w[:, None] * h[s])
+            return aggregate_with_halo(h, local, pl, "workers", P)
+
+        return jax.vmap(worker, axis_name="workers")(xs, plan, cs, cd, cw)
+
+    def _run_hier(self, hpg, xs, cs, cd, cw):
+        plan = stack_hier_plan(build_hier_halo_plan(hpg))
+
+        def worker(h, pl, s, d, w):
+            local = jnp.zeros_like(h).at[d].add(w[:, None] * h[s])
+            return aggregate_with_halo_hierarchical(
+                h, local, pl, "node", "group", W, G)
+
+        args = jax.tree_util.tree_map(_nested, (xs, plan, cs, cd, cw))
+        out = jax.vmap(jax.vmap(worker, axis_name="node"),
+                       axis_name="group")(*args)
+        return np.asarray(out).reshape(P, *out.shape[2:])
+
+    def test_bitforbit_vs_flat_integer_features(self, rmat_setup):
+        """Integer features + unit weights: every partial sum is exact in
+        fp32, so the two association orders must agree bit-for-bit."""
+        g, part, hpg, pgf = rmat_setup  # unnormalized -> unit edge weights
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 8, size=(g.num_nodes, 16)).astype(np.float32)
+        xs, cs, cd, cw = self._worker_inputs(g, pgf, x)
+        flat = np.asarray(self._run_flat(pgf, xs, cs, cd, cw))
+        hier = self._run_hier(hpg, xs, cs, cd, cw)
+        np.testing.assert_array_equal(hier, flat)
+        # ... and both equal the single-device full-graph SpMM.
+        ref = np.zeros_like(x)
+        np.add.at(ref, g.dst, x[g.src])
+        got = _scatter_global(pgf, flat, g.num_nodes, x.shape[1])
+        np.testing.assert_array_equal(got, ref)
+
+    def test_allclose_vs_flat_normalized(self, rmat_setup):
+        """Mean-normalized weights + gaussian features: allclose."""
+        g, part, _, _ = rmat_setup
+        gn = g.mean_normalized()
+        hpg = build_hierarchical_partitioned_graph(gn, G, W, part=part,
+                                                   strategy="hybrid", seed=0)
+        pgf = build_partitioned_graph(gn, P, part=part, strategy="hybrid",
+                                      seed=0)
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(g.num_nodes, 8)).astype(np.float32)
+        xs, cs, cd, cw = self._worker_inputs(gn, pgf, x)
+        flat = np.asarray(self._run_flat(pgf, xs, cs, cd, cw))
+        hier = self._run_hier(hpg, xs, cs, cd, cw)
+        np.testing.assert_allclose(hier, flat, rtol=1e-5, atol=1e-5)
+
+    def test_quantized_hier_close_and_grads_flow(self, rmat_setup):
+        g, part, _, _ = rmat_setup
+        gn = g.mean_normalized()
+        hpg = build_hierarchical_partitioned_graph(gn, G, W, part=part,
+                                                   strategy="hybrid", seed=0)
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(gn.num_nodes, 8)).astype(np.float32)
+        xs, cs, cd, cw = self._worker_inputs(gn, hpg.base, x)
+        plan = stack_hier_plan(build_hier_halo_plan(hpg))
+        args = jax.tree_util.tree_map(_nested, (xs, plan, cs, cd, cw))
+
+        def worker(h, pl, s, d, w, key):
+            local = jnp.zeros_like(h).at[d].add(w[:, None] * h[s])
+            return aggregate_with_halo_hierarchical(
+                h, local, pl, "node", "group", W, G, bits=8, key=key)
+
+        out8 = jax.vmap(jax.vmap(worker, axis_name="node",
+                                 in_axes=(0, 0, 0, 0, 0, None)),
+                        axis_name="group",
+                        in_axes=(0, 0, 0, 0, 0, None))(
+                            *args, jax.random.PRNGKey(0))
+        fp = self._run_hier(hpg, xs, cs, cd, cw)
+        err = float(jnp.abs(out8.reshape(fp.shape) - fp).max())
+        assert err < 0.05 * float(np.abs(fp).max()) + 1e-3
+
+        def gworker(h, pl, s, d, w, key):
+            def loss(hh):
+                o = worker(hh, pl, s, d, w, key)
+                return jax.lax.psum((o ** 2).sum(), ("node", "group"))
+            return jax.grad(loss)(h)
+
+        grads = jax.vmap(jax.vmap(gworker, axis_name="node",
+                                  in_axes=(0, 0, 0, 0, 0, None)),
+                         axis_name="group",
+                         in_axes=(0, 0, 0, 0, 0, None))(
+                             *args, jax.random.PRNGKey(1))
+        assert bool(jnp.isfinite(grads).all())
+        assert float(jnp.abs(grads).sum()) > 0
+
+
+class TestHierTraining:
+    @pytest.fixture(scope="class")
+    def sbm_setup(self):
+        g = sbm_graph(600, 5, avg_degree=12, homophily=0.85, seed=0)
+        x, _ = sbm_features(g, 16, noise=1.5, seed=1)
+        return g, x
+
+    def _cfg(self, **kw):
+        base = dict(model="sage", in_dim=16, hidden_dim=32, num_classes=5,
+                    num_layers=2, dropout=0.0, label_prop=False)
+        base.update(kw)
+        return GCNConfig(**base)
+
+    def test_training_step_matches_flat(self, sbm_setup):
+        """Acceptance: fp32 hierarchical training == flat numerically."""
+        g, x = sbm_setup
+        gn = g.mean_normalized()
+        part = partition_hierarchical(gn, G, W, seed=0)
+        hpg = build_hierarchical_partitioned_graph(gn, G, W, part=part,
+                                                   strategy="hybrid", seed=0)
+        pgf = build_partitioned_graph(gn, P, part=part, strategy="hybrid",
+                                      seed=0)
+        cfg = self._cfg()
+        wd_h = prepare_distributed(gn, x, hpg)
+        wd_f = prepare_distributed(gn, x, pgf)
+        dc_h = DistConfig(nparts=P, bits=0, lr=0.01,
+                          num_groups=G, group_size=W)
+        dc_f = DistConfig(nparts=P, bits=0, lr=0.01)
+        tr_h = DistributedTrainer(cfg, dc_h, wd_h, mode="vmap", seed=0)
+        tr_f = DistributedTrainer(cfg, dc_f, wd_f, mode="vmap", seed=0)
+        for _ in range(3):
+            m_h = tr_h.train_epoch()
+            m_f = tr_f.train_epoch()
+            np.testing.assert_allclose(m_h["loss"], m_f["loss"],
+                                       rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(m_h["train_acc"], m_f["train_acc"],
+                                       rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(tr_h.evaluate(), tr_f.evaluate(),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_hier_forward_equals_flat_forward(self, sbm_setup):
+        """_dist_forward under the nested virtual mesh == flat vmap."""
+        g, x = sbm_setup
+        gn = g.mean_normalized()
+        part = partition_hierarchical(gn, G, W, seed=0)
+        hpg = build_hierarchical_partitioned_graph(gn, G, W, part=part,
+                                                   strategy="hybrid", seed=0)
+        pgf = build_partitioned_graph(gn, P, part=part, strategy="hybrid",
+                                      seed=0)
+        cfg = self._cfg()
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        wd_h = prepare_distributed(gn, x, hpg)
+        wd_f = prepare_distributed(gn, x, pgf)
+        dc_h = DistConfig(nparts=P, bits=0, num_groups=G, group_size=W)
+        dc_f = DistConfig(nparts=P, bits=0)
+
+        def worker_h(p, w):
+            logits, _ = _dist_forward(p, cfg, dc_h, w,
+                                      jnp.zeros_like(w.train_mask), None, False)
+            return logits
+
+        def worker_f(p, w):
+            logits, _ = _dist_forward(p, cfg, dc_f, w,
+                                      jnp.zeros_like(w.train_mask), None, False)
+            return logits
+
+        wd_hn = jax.tree_util.tree_map(_nested, wd_h)
+        lg_h = jax.vmap(jax.vmap(worker_h, axis_name="node",
+                                 in_axes=(None, 0)),
+                        axis_name="group", in_axes=(None, 0))(params, wd_hn)
+        lg_f = jax.vmap(worker_f, axis_name="workers",
+                        in_axes=(None, 0))(params, wd_f)
+        np.testing.assert_allclose(
+            np.asarray(lg_h).reshape(P, *lg_h.shape[2:]), np.asarray(lg_f),
+            rtol=1e-4, atol=1e-4)
+
+    def test_hier_int2_learns(self, sbm_setup):
+        g, x = sbm_setup
+        gn = g.mean_normalized()
+        cfg = self._cfg(dropout=0.2, label_prop=True, norm="layer")
+        hpg = build_hierarchical_partitioned_graph(gn, G, W,
+                                                   strategy="hybrid", seed=0)
+        wd = prepare_distributed(gn, x, hpg)
+        dc = DistConfig(nparts=P, bits=2, lr=0.01, num_groups=G, group_size=W)
+        tr = DistributedTrainer(cfg, dc, wd, mode="vmap", seed=0)
+        hist = tr.fit(25, log_every=25)
+        assert hist[-1]["eval_acc"] > 0.8, hist
