@@ -1,7 +1,7 @@
 # Tier-1 verification (same command as ROADMAP.md).
 PY ?= python
 
-.PHONY: check check-fast bench-comm
+.PHONY: check check-fast bench-comm bench-comm-sweep
 
 check:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -11,6 +11,10 @@ check-fast:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q -m "not slow"
 
 bench-comm:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -c \
-		"import json, sys; sys.path.insert(0, 'benchmarks'); import comm_volume; \
-		print(json.dumps(comm_volume.run(), indent=1))"
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/comm_volume.py
+
+# G x W grid as JSON (archived as a CI artifact); SWEEP_OUT overrides path.
+SWEEP_OUT ?= bench_comm_sweep.json
+bench-comm-sweep:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/comm_volume.py \
+		--sweep --scale 11 --out $(SWEEP_OUT)

@@ -7,13 +7,25 @@ reproduction targets the ratios.
 
 Also reports the hierarchical (two-level) split: rows that stay on the
 fast intra-group exchange vs rows crossing groups, flat and after the
-per-group aggregation step (paper contribution 2).
+per-group aggregation step (paper contribution 2) — and cross-checks the
+``CommStats.volume_bytes`` per-stage predictions against the wire bytes
+computed independently from the realized per-pair plan volumes under an
+``ExchangeSchedule``'s stage specs.
+
+CLI:
+  python benchmarks/comm_volume.py [--scale N] [--nparts P] [--groups G]
+  python benchmarks/comm_volume.py --sweep [--out sweep.json]   # G x W grid
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
+
 import numpy as np
 
+from repro.core import DistConfig
 from repro.core.perf_model import FUGAKU_A64FX, comm_time
 from repro.graph import (
     build_hierarchical_partitioned_graph,
@@ -23,7 +35,8 @@ from repro.graph import (
 from repro.quant import wire_bytes
 
 
-def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256) -> list:
+def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256,
+        num_groups: int = 0) -> list:
     g = rmat_graph(scale, edge_factor=8, seed=1)
     pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
     s = pg.stats
@@ -69,24 +82,34 @@ def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256) -> list:
                     f"{s.hybrid * feat_dim * 4 / wire_bytes(s.hybrid, feat_dim, 2):.1f}x,"
                     f"paper=1.52x,15.5x"),
     })
-    if nparts % 4 == 0:  # two-level split needs nparts = groups x 4
-        rows.extend(run_hierarchical(g, nparts, feat_dim))
+    if num_groups and nparts % num_groups:
+        raise ValueError(
+            f"num_groups ({num_groups}) must divide nparts ({nparts})")
+    group_size = nparts // num_groups if num_groups else 4
+    if group_size >= 1 and nparts % group_size == 0:
+        hpg = build_hierarchical_partitioned_graph(
+            g, nparts // group_size, group_size, strategy="hybrid", seed=0)
+        rows.extend(run_hierarchical(g, nparts, feat_dim,
+                                     group_size=group_size, hpg=hpg))
+        rows.extend(run_schedule_check(g, nparts, feat_dim,
+                                       group_size=group_size, pg=pg, hpg=hpg))
     return rows
 
 
 def run_hierarchical(g=None, nparts: int = 16, feat_dim: int = 256,
-                     group_size: int = 4, scale: int = 13) -> list:
+                     group_size: int = 4, scale: int = 13, hpg=None) -> list:
     """Two-level split on the same graph: intra rows stay on the fast
     fabric; inter rows shrink via group-level dedup/merge."""
-    if g is None:
+    if g is None and hpg is None:
         g = rmat_graph(scale, edge_factor=8, seed=1)
     if group_size < 1 or nparts % group_size or nparts < group_size:
         raise ValueError(
             f"nparts ({nparts}) must be a positive multiple of group_size "
             f"({group_size}) so the two-level rows compare to the flat rows")
     num_groups = nparts // group_size
-    hpg = build_hierarchical_partitioned_graph(
-        g, num_groups, group_size, strategy="hybrid", seed=0)
+    if hpg is None:
+        hpg = build_hierarchical_partitioned_graph(
+            g, num_groups, group_size, strategy="hybrid", seed=0)
     s = hpg.stats
     hw = FUGAKU_A64FX
 
@@ -119,3 +142,141 @@ def run_hierarchical(g=None, nparts: int = 16, feat_dim: int = 256,
             "derived": f"inter_savings={s.inter_savings():.2f}x",
         },
     ]
+
+
+def realized_stage_rows(pg, hpg=None) -> dict:
+    """Per-stage wire rows summed directly from the realized plans — the
+    ground truth the CommStats per-stage predictions must match."""
+    out = {"flat": sum(pl.volume for pl in pg.pair_plans.values())}
+    if hpg is not None:
+        W = hpg.group_size
+        out["intra"] = sum(pl.volume
+                           for (q, p), pl in hpg.base.pair_plans.items()
+                           if q // W == p // W)
+        out["inter"] = sum(pl.volume
+                           for pl in hpg.group_pair_plans.values())
+    return out
+
+
+def run_schedule_check(g=None, nparts: int = 16, feat_dim: int = 256,
+                       group_size: int = 4, scale: int = 13,
+                       pg=None, hpg=None) -> list:
+    """Acceptance check: ``CommStats.volume_bytes`` per-stage predictions
+    (threaded with each stage's bits/cd) equal the wire bytes computed
+    independently from the realized plan volumes.
+
+    ``pg``/``hpg`` reuse already-built partitions (run() passes its own)."""
+    if g is None and (pg is None or hpg is None):
+        g = rmat_graph(scale, edge_factor=8, seed=1)
+    num_groups = nparts // group_size
+    if pg is None:
+        pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
+    if hpg is None:
+        hpg = build_hierarchical_partitioned_graph(
+            g, num_groups, group_size, strategy="hybrid", seed=0)
+    actual_rows = realized_stage_rows(pg, hpg)
+
+    def actual_bytes(rows_count, bits, cd):
+        if bits == 0:
+            return rows_count * feat_dim * 4.0 / cd
+        return wire_bytes(rows_count, feat_dim, bits) / cd
+
+    schedules = [
+        ("flat_int2", DistConfig(nparts=nparts, bits=2), pg.stats),
+        ("flat_int2_cd2", DistConfig(nparts=nparts, bits=2, cd=2), pg.stats),
+        ("hier_mixed", DistConfig(nparts=nparts, bits=0, inter_bits=2,
+                                  inter_cd=2, num_groups=num_groups,
+                                  group_size=group_size), hpg.stats),
+    ]
+    rows = []
+    for name, dc, stats in schedules:
+        sched = dc.schedule()
+        predicted = sched.wire_volume_bytes(stats, feat_dim)
+        actual = {st.level: actual_bytes(actual_rows[st.level], st.bits, st.cd)
+                  for st in sched.stages}
+        match = all(np.isclose(predicted[k], actual[k], rtol=0, atol=0.5)
+                    for k in predicted)
+        rows.append({
+            "name": f"comm_volume_schedule/{name}",
+            "us_per_call": 0.0,
+            "derived": ";".join(
+                f"{k}:pred_b={predicted[k]:.0f}:actual_b={actual[k]:.0f}"
+                for k in predicted) + f";match={match}",
+        })
+        if not match:
+            raise AssertionError(
+                f"schedule {name}: predicted {predicted} != actual {actual}")
+    return rows
+
+
+def sweep(scale: int = 12, feat_dim: int = 256,
+          grid=((2, 2), (2, 4), (4, 2), (4, 4), (8, 4))) -> list:
+    """Small G x W grid of the two-level split (ROADMAP strong-scaling
+    seed): per-combo stage rows + predicted wire bytes for the default
+    Int2-inter schedule."""
+    g = rmat_graph(scale, edge_factor=8, seed=1)
+    out = []
+    for num_groups, group_size in grid:
+        nparts = num_groups * group_size
+        hpg = build_hierarchical_partitioned_graph(
+            g, num_groups, group_size, strategy="hybrid", seed=0)
+        s = hpg.stats
+        dc = DistConfig(nparts=nparts, bits=0, inter_bits=2,
+                        num_groups=num_groups, group_size=group_size)
+        out.append({
+            "scale": scale,
+            "num_groups": num_groups,
+            "group_size": group_size,
+            "nparts": nparts,
+            "intra_rows": s.intra_rows,
+            "inter_rows": s.inter_rows,
+            "flat_inter_rows": s.flat_inter_rows,
+            "inter_savings": round(s.inter_savings(), 4),
+            "predicted_wire_bytes":
+                dc.schedule().wire_volume_bytes(s, feat_dim),
+        })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--scale", type=int, default=13,
+                    help="R-MAT scale (2^scale nodes)")
+    ap.add_argument("--nparts", type=int, default=None,
+                    help="worker count (default 16; not valid with --sweep, "
+                         "whose G x W grid is fixed)")
+    ap.add_argument("--groups", type=int, default=0,
+                    help="num_groups for the two-level rows "
+                         "(default nparts // 4 groups of 4)")
+    ap.add_argument("--feat-dim", type=int, default=256)
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the G x W grid and emit JSON instead of CSV")
+    ap.add_argument("--out", type=str, default=None,
+                    help="with --sweep: write the JSON here instead of stdout")
+    args = ap.parse_args()
+    if args.sweep and (args.nparts is not None or args.groups):
+        ap.error("--sweep runs a fixed G x W grid; --nparts/--groups "
+                 "only apply to the single-topology run")
+    nparts = args.nparts if args.nparts is not None else 16
+    if args.groups and nparts % args.groups:
+        ap.error(f"--groups {args.groups} must divide --nparts {nparts}")
+
+    if args.sweep:
+        result = sweep(scale=args.scale, feat_dim=args.feat_dim)
+        payload = json.dumps(result, indent=1)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(payload)
+            print(f"wrote {len(result)} sweep rows to {args.out}",
+                  file=sys.stderr)
+        else:
+            print(payload)
+        return
+    print("name,us_per_call,derived")
+    for row in run(scale=args.scale, nparts=nparts,
+                   feat_dim=args.feat_dim, num_groups=args.groups):
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 # SuperGCN core: the paper's primary contribution in JAX.
 from repro.core.model import GCNConfig, forward, init_params, loss_and_metrics, lp_masks
+from repro.core.exchange import ExchangeSchedule, StageSpec
 from repro.core.trainer import (
     DistConfig,
     DistributedTrainer,
@@ -18,6 +19,8 @@ from repro.core.halo import (
 )
 
 __all__ = [
+    "ExchangeSchedule",
+    "StageSpec",
     "DeviceHierPlan",
     "aggregate_with_halo_hierarchical",
     "halo_exchange_hierarchical",

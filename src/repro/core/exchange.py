@@ -1,0 +1,481 @@
+"""Composable halo-exchange schedules: one code path for every wire config.
+
+The paper's three contributions are orthogonal *axes* of the halo exchange,
+not separate exchanges:
+
+  * topology  — flat all_to_all over P workers, or hierarchical two-level
+                (fast intra-group all_to_all + group-aggregated inter-group
+                pipeline);
+  * wire      — fp32, or stochastically quantized Int2/4/8 (§7.3);
+  * caching   — sync (fresh halo every epoch) or DistGNN-style delayed
+                communication that reuses a stale buffer for cd-1 epochs.
+
+This module makes the composition explicit. An :class:`ExchangeSchedule` is
+a sequence of :class:`StageSpec` stages — the single ``flat`` level, or
+(``intra``, ``inter``) for the hierarchical exchange — and every stage
+independently chooses its wire format (``bits``) and caching policy
+(``cd``). The trainer dispatches each GCN layer through
+:meth:`ExchangeSchedule.run_layer` regardless of configuration, so e.g.
+
+  * ``flat  × Int2 × delayed(3)``                       (DistGNN + quant),
+  * ``intra: fp32 sync  |  inter: Int2 delayed(4)``     (fresh fast level,
+    stale quantized slow level — the paper-faithful scaling configuration),
+  * ``intra: Int2 sync  |  inter: Int2 sync``           (Int2 everywhere)
+
+are all the same code path with different schedule entries.
+
+Execution model per stage (forward):
+
+  assemble_send -> [pre-wire: psum_scatter for ``inter``] -> all_to_all of
+  (payload [+ fp32 zero/scale per 4-row quant group]) -> dequantize ->
+  [post-wire: all_gather for ``inter``] -> scatter_recv
+
+Every stage's wire pipeline is self-transpose (reduce-scatter^T =
+all-gather, all_to_all^T = all_to_all), so ONE quantized
+``jax.custom_vjp`` — :func:`quantized_exchange`, parameterized by a static
+:class:`StageTopo` — serves flat, intra and inter stages alike: the
+backward pass re-applies the same exchange to the (re-quantized)
+cotangents, which Lemma 1's stochastic rounding keeps unbiased.
+
+Delayed stages own their slice of the per-layer halo cache: the schedule
+decides the cache pytree structure (one buffer per delayed stage per
+layer), refreshes a stage whenever ``epoch % cd == 0``, and serves the
+stop-gradient stale buffer otherwise. Sync stages carry no cache state.
+
+Works identically under ``shard_map`` (real meshes) and ``jax.vmap``
+(virtual workers), since both implement named-axis collective semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.stochastic import ROW_GROUP, QuantParams, dequantize, quantize
+
+WIRE_BITS = (0, 2, 4, 8)  # 0 = fp32
+STAGE_LEVELS = ("flat", "intra", "inter")
+
+
+# --------------------------------------------------------------------------
+# Device-ready halo plans (per-worker slices of graph.remote plans)
+# --------------------------------------------------------------------------
+
+
+class DeviceHaloPlan(NamedTuple):
+    """Per-worker slices of graph.remote.HaloPlan, as device arrays.
+
+    Leading axis of each array in the *stacked* plan is the worker axis;
+    inside shard_map/vmap each worker sees its own slice (no leading axis).
+    """
+
+    send_gather_idx: jax.Array   # [C*R] int32 (C chunks of R wire rows)
+    send_gather_mask: jax.Array  # [C*R] bool
+    pre_src: jax.Array           # [pre_nnz] int32
+    pre_slot: jax.Array          # [pre_nnz] int32
+    pre_weight: jax.Array        # [pre_nnz] f32
+    recv_row: jax.Array          # [recv_nnz] int32
+    recv_dst: jax.Array          # [recv_nnz] int32
+    recv_weight: jax.Array       # [recv_nnz] f32
+
+
+def stack_halo_plan(hp) -> DeviceHaloPlan:
+    """graph.remote.HaloPlan (host numpy, [P, ...]) -> stacked device plan."""
+    return DeviceHaloPlan(
+        send_gather_idx=jnp.asarray(hp.send_gather_idx, jnp.int32),
+        send_gather_mask=jnp.asarray(hp.send_gather_mask),
+        pre_src=jnp.asarray(hp.pre_src, jnp.int32),
+        pre_slot=jnp.asarray(hp.pre_slot, jnp.int32),
+        pre_weight=jnp.asarray(hp.pre_weight),
+        recv_row=jnp.asarray(hp.recv_row, jnp.int32),
+        recv_dst=jnp.asarray(hp.recv_dst, jnp.int32),
+        recv_weight=jnp.asarray(hp.recv_weight),
+    )
+
+
+class DeviceHierPlan(NamedTuple):
+    """Two DeviceHaloPlan's: intra (rank chunks) + inter (group chunks)."""
+
+    intra: DeviceHaloPlan
+    inter: DeviceHaloPlan
+
+
+def stack_hier_plan(hp) -> DeviceHierPlan:
+    """graph.remote.HierHaloPlan (host numpy) -> stacked device plan."""
+    return DeviceHierPlan(
+        intra=stack_halo_plan(hp.intra),
+        inter=stack_halo_plan(hp.inter),
+    )
+
+
+def assemble_send(h: jax.Array, plan: DeviceHaloPlan) -> jax.Array:
+    """Build the [C*R, F] wire buffer: post raws + pre partials (Fig 2 step 4)."""
+    raw = jnp.where(plan.send_gather_mask[:, None], h[plan.send_gather_idx], 0.0)
+    send = raw.at[plan.pre_slot].add(plan.pre_weight[:, None] * h[plan.pre_src])
+    return send
+
+
+def scatter_recv(acc: jax.Array, recv: jax.Array, plan: DeviceHaloPlan) -> jax.Array:
+    """Post-aggregate received rows into the local accumulator (Fig 2 step 6)."""
+    return acc.at[plan.recv_dst].add(plan.recv_weight[:, None] * recv[plan.recv_row])
+
+
+# --------------------------------------------------------------------------
+# Stage topology + the two wire primitives (fp32, quantized)
+# --------------------------------------------------------------------------
+
+
+class StageTopo(NamedTuple):
+    """Static description of one stage's collective pipeline.
+
+    ``kind="a2a"``: plain tiled all_to_all over ``wire_axis`` with
+    ``wire_chunks`` per-destination chunks (the flat exchange, and the
+    intra level of the hierarchical exchange).
+
+    ``kind="grouped"``: psum_scatter over ``shard_axis`` (merging the
+    ``shard_size`` workers' additive contributions and sharding the group
+    buffer 1/W per worker) -> all_to_all over ``wire_axis`` (the only slow
+    traffic) -> all_gather over ``shard_axis`` (the inter level).
+
+    Hashable, so it can ride ``custom_vjp`` as a nondiff argument.
+    """
+
+    kind: str            # "a2a" | "grouped"
+    wire_axis: str
+    wire_chunks: int
+    shard_axis: str = ""
+    shard_size: int = 1
+
+
+def _wire_a2a(v: jax.Array, topo: StageTopo) -> jax.Array:
+    """Tiled all_to_all of a [rows, F] buffer in ``wire_chunks`` chunks."""
+    return jax.lax.all_to_all(
+        v.reshape(topo.wire_chunks, -1, v.shape[-1]), topo.wire_axis,
+        split_axis=0, concat_axis=0, tiled=False,
+    ).reshape(v.shape)
+
+
+def _pre_wire(x: jax.Array, topo: StageTopo) -> jax.Array:
+    """Transform the assembled send buffer into what goes on the wire."""
+    if topo.kind == "a2a":
+        return x
+    rows, feat = x.shape
+    s = rows // (topo.wire_chunks * topo.shard_size)
+    y = x.reshape(topo.wire_chunks, topo.shard_size, s, feat)
+    # Per-group aggregation: partials destined for the same remote row merge
+    # here, and the group buffer lands sharded 1/W per worker.
+    shard = jax.lax.psum_scatter(y, topo.shard_axis, scatter_dimension=1,
+                                 tiled=False)                   # [G, s, F]
+    return shard.reshape(topo.wire_chunks * s, feat)
+
+
+def _post_wire(y: jax.Array, topo: StageTopo) -> jax.Array:
+    """Transform the wire recv buffer back into the full recv buffer."""
+    if topo.kind == "a2a":
+        return y
+    feat = y.shape[-1]
+    s = y.shape[0] // topo.wire_chunks
+    recv = y.reshape(topo.wire_chunks, s, feat)
+    full = jax.lax.all_gather(recv, topo.shard_axis, axis=1,
+                              tiled=False)                      # [G, W, s, F]
+    return full.reshape(topo.wire_chunks * topo.shard_size * s, feat)
+
+
+def exchange_fp32(send: jax.Array, topo: StageTopo) -> jax.Array:
+    """FP32 exchange of an assembled send buffer. Exact VJP via JAX's
+    built-in collective transposes (the pipeline is self-transpose)."""
+    return _post_wire(_wire_a2a(_pre_wire(send, topo), topo), topo)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def quantized_exchange(send, key, topo: StageTopo, bits: int):
+    """THE quantized exchange — the exchange layer's single custom VJP.
+
+    Quantization happens on the wire buffer (for ``grouped`` topologies
+    that is *after* the psum_scatter: the merged partials are what crosses
+    the network), the all_to_all carries the int payload plus the fp32
+    (zero, scale) per 4-row quant group, and dequantization happens before
+    any post-wire fan-out.
+    """
+    w = _pre_wire(send, topo)
+    q, params = quantize(w, bits, key)
+    qr = _wire_a2a(q.astype(jnp.int32), topo)
+    # fp32 (zero, scale) ride along — the paper's "params" wire term (Eqn 5).
+    zr = _wire_a2a(params.zero[:, None], topo).reshape(-1)
+    sr = _wire_a2a(params.scale[:, None], topo).reshape(-1)
+    deq = dequantize(qr, QuantParams(zr, sr))
+    return _post_wire(deq, topo)
+
+
+def _quantized_exchange_fwd(send, key, topo, bits):
+    return quantized_exchange(send, key, topo, bits), key
+
+
+def _quantized_exchange_bwd(topo, bits, key, g):
+    # Self-transpose pipeline: the reverse exchange IS the same exchange.
+    # Cotangents are re-quantized with a folded key — unbiased per Lemma 1.
+    gkey = jax.random.fold_in(key, 0x5BD1)
+    gq = quantized_exchange(g, gkey, topo, bits)
+    return gq, None
+
+
+quantized_exchange.defvjp(_quantized_exchange_fwd, _quantized_exchange_bwd)
+
+
+def _check_quant_alignment(topo: StageTopo, rows: int) -> None:
+    """Quant row groups (4 rows share zero/scale) must not straddle the
+    per-destination wire chunks."""
+    per_chunk = rows // topo.wire_chunks
+    if topo.kind == "grouped":
+        per_chunk = rows // (topo.wire_chunks * topo.shard_size)
+    if per_chunk % ROW_GROUP:
+        raise ValueError(
+            f"{topo.kind} stage wire chunk of {per_chunk} rows is not a "
+            f"multiple of the quant row group ({ROW_GROUP})")
+
+
+def stage_exchange(send: jax.Array, topo: StageTopo, bits: int,
+                   key: Optional[jax.Array]) -> jax.Array:
+    """One stage's exchange of an assembled send buffer (fp32 or quantized)."""
+    if bits == 0:
+        return exchange_fp32(send, topo)
+    if key is None:
+        raise ValueError("quantized exchange needs a PRNG key")
+    _check_quant_alignment(topo, send.shape[0])
+    return quantized_exchange(send, key, topo, bits)
+
+
+# --------------------------------------------------------------------------
+# Schedule: per-stage (level, bits, caching policy)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    """One exchange stage: a level with its wire format and caching policy.
+
+    ``bits`` — 0 (fp32) or 2/4/8 (stochastic quantization).
+    ``cd``   — 1 = sync (fresh exchange every epoch); cd > 1 = delayed
+               communication: refresh when ``epoch % cd == 0``, serve the
+               stale stop-gradient buffer otherwise (DistGNN's cd-N).
+    """
+
+    level: str   # "flat" | "intra" | "inter"
+    bits: int = 0
+    cd: int = 1
+
+    def __post_init__(self):
+        if self.level not in STAGE_LEVELS:
+            raise ValueError(f"unknown stage level {self.level!r}")
+        if self.bits not in WIRE_BITS:
+            raise ValueError(f"bits must be one of {WIRE_BITS}, got {self.bits}")
+        if self.cd < 1:
+            raise ValueError(f"cd must be >= 1, got {self.cd}")
+
+    @property
+    def delayed(self) -> bool:
+        return self.cd > 1
+
+    def as_dict(self) -> dict:
+        return {"level": self.level, "bits": self.bits,
+                "policy": f"delayed({self.cd})" if self.delayed else "sync"}
+
+
+@dataclass(frozen=True)
+class ExchangeSchedule:
+    """A sequence of exchange stages plus the axis layout they run on.
+
+    Flat schedules hold exactly one ``flat`` stage over ``axis_name``;
+    hierarchical schedules hold (``intra``, ``inter``) over
+    (``node_axis``, ``group_axis``) with ``num_groups * group_size ==
+    nparts``. Build via :meth:`flat` / :meth:`hierarchical` (or
+    ``DistConfig.schedule()`` in the trainer).
+    """
+
+    stages: Tuple[StageSpec, ...]
+    nparts: int
+    axis_name: str = "workers"
+    node_axis: str = "node"
+    group_axis: str = "group"
+    num_groups: int = 0
+    group_size: int = 0
+
+    def __post_init__(self):
+        levels = tuple(s.level for s in self.stages)
+        if levels == ("flat",):
+            if self.num_groups or self.group_size:
+                raise ValueError("flat schedule must not set num_groups/group_size")
+        elif levels == ("intra", "inter"):
+            if self.num_groups < 1 or self.group_size < 1:
+                raise ValueError(
+                    "hierarchical schedule needs num_groups >= 1 and "
+                    f"group_size >= 1, got {self.num_groups}x{self.group_size}")
+            if self.num_groups * self.group_size != self.nparts:
+                raise ValueError(
+                    f"num_groups * group_size ({self.num_groups}x"
+                    f"{self.group_size}) must equal nparts ({self.nparts})")
+        else:
+            raise ValueError(
+                f"schedule stages must be ('flat',) or ('intra', 'inter'), "
+                f"got {levels}")
+
+    # -- constructors ------------------------------------------------------
+
+    @staticmethod
+    def flat(nparts: int, bits: int = 0, cd: int = 1,
+             axis_name: str = "workers") -> "ExchangeSchedule":
+        return ExchangeSchedule(
+            stages=(StageSpec("flat", bits=bits, cd=cd),),
+            nparts=nparts, axis_name=axis_name)
+
+    @staticmethod
+    def hierarchical(num_groups: int, group_size: int, *,
+                     intra_bits: int = 0, inter_bits: int = 0,
+                     intra_cd: int = 1, inter_cd: int = 1,
+                     node_axis: str = "node",
+                     group_axis: str = "group") -> "ExchangeSchedule":
+        return ExchangeSchedule(
+            stages=(StageSpec("intra", bits=intra_bits, cd=intra_cd),
+                    StageSpec("inter", bits=inter_bits, cd=inter_cd)),
+            nparts=num_groups * group_size,
+            node_axis=node_axis, group_axis=group_axis,
+            num_groups=num_groups, group_size=group_size)
+
+    # -- structure ---------------------------------------------------------
+
+    @property
+    def is_hierarchical(self) -> bool:
+        return self.stages[0].level != "flat"
+
+    @property
+    def psum_axes(self):
+        """Axis name(s) spanning all workers, for grad/metric reductions."""
+        if self.is_hierarchical:
+            return (self.node_axis, self.group_axis)
+        return self.axis_name
+
+    @property
+    def uses_cache(self) -> bool:
+        return any(s.delayed for s in self.stages)
+
+    @property
+    def delayed_indices(self) -> Tuple[int, ...]:
+        return tuple(i for i, s in enumerate(self.stages) if s.delayed)
+
+    def as_sync(self) -> "ExchangeSchedule":
+        """The same schedule with every stage forced to sync (cd=1)."""
+        import dataclasses
+        return dataclasses.replace(
+            self, stages=tuple(dataclasses.replace(s, cd=1)
+                               for s in self.stages))
+
+    def topo(self, stage: StageSpec) -> StageTopo:
+        if stage.level == "flat":
+            return StageTopo("a2a", self.axis_name, self.nparts)
+        if stage.level == "intra":
+            return StageTopo("a2a", self.node_axis, self.group_size)
+        return StageTopo("grouped", self.group_axis, self.num_groups,
+                         self.node_axis, self.group_size)
+
+    def plan_for(self, stage: StageSpec, wd) -> DeviceHaloPlan:
+        """Pick the stage's device plan off a WorkerData-like carrier (any
+        object with ``plan`` / ``hier_plan`` attributes)."""
+        if stage.level == "flat":
+            if wd.plan is None:
+                raise ValueError("flat schedule needs WorkerData.plan")
+            return wd.plan
+        if wd.hier_plan is None:
+            raise ValueError("hierarchical schedule needs WorkerData.hier_plan")
+        return wd.hier_plan.intra if stage.level == "intra" else wd.hier_plan.inter
+
+    # -- execution ---------------------------------------------------------
+
+    def run_layer(self, h: jax.Array, local_agg: jax.Array, wd,
+                  key: Optional[jax.Array],
+                  cache_entry: Optional[Sequence[jax.Array]] = None,
+                  epoch: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+        """One GCN layer's full exchange: every stage in order, each with
+        its own wire format and caching policy.
+
+        ``cache_entry`` holds one stale recv buffer per *delayed* stage (in
+        stage order); ``epoch`` drives the per-stage refresh. Returns the
+        aggregated output and the new cache entry (empty for all-sync
+        schedules).
+
+        Note on delayed stages under jit: ``epoch`` is a traced value, so
+        the lowered program contains (and executes) every stage's
+        collectives on stale epochs too — ``jnp.where`` merely selects the
+        stale buffer. A real async runtime skips those sends; the
+        per-stage cd amortization in :meth:`wire_volume_bytes` models that
+        runtime, not the lowered HLO.
+        """
+        acc = local_agg
+        new_entry: List[jax.Array] = []
+        ci = 0
+        for si, stage in enumerate(self.stages):
+            plan = self.plan_for(stage, wd)
+            kq = jax.random.fold_in(key, si) if key is not None else None
+            send = assemble_send(h, plan)
+            recv = stage_exchange(send, self.topo(stage), stage.bits, kq)
+            if stage.delayed:
+                if cache_entry is None or epoch is None:
+                    raise ValueError(
+                        f"stage {stage.level!r} is delayed(cd={stage.cd}) "
+                        "and needs a halo cache + epoch")
+                refresh = (epoch % stage.cd) == 0
+                stale = jax.lax.stop_gradient(cache_entry[ci])
+                recv = jnp.where(refresh, recv, stale)
+                new_entry.append(jax.lax.stop_gradient(recv))
+                ci += 1
+            acc = scatter_recv(acc, recv, plan)
+        return acc, tuple(new_entry)
+
+    # -- cache layout ------------------------------------------------------
+
+    def cache_rows(self, wd) -> Tuple[int, ...]:
+        """Recv-buffer row count for each delayed stage (cache shapes)."""
+        return tuple(
+            self.plan_for(self.stages[i], wd).send_gather_idx.shape[-1]
+            for i in self.delayed_indices)
+
+    def init_cache(self, wd, feature_dims: Sequence[int],
+                   lead: Tuple[int, ...] = ()) -> List[Tuple[jax.Array, ...]]:
+        """Zero halo cache: one buffer per (layer, delayed stage).
+
+        ``feature_dims[l]`` is the width layer ``l`` exchanges; ``lead``
+        prefixes the stacked worker dims ((P,) for flat vmap/shard_map,
+        (G, W) for the nested hierarchical vmap).
+        """
+        rows = self.cache_rows(wd)
+        return [tuple(jnp.zeros((*lead, r, f)) for r in rows)
+                for f in feature_dims]
+
+    # -- accounting --------------------------------------------------------
+
+    def describe(self) -> dict:
+        d = {"stages": [s.as_dict() for s in self.stages],
+             "nparts": self.nparts}
+        if self.is_hierarchical:
+            d.update(num_groups=self.num_groups, group_size=self.group_size)
+        return d
+
+    def wire_volume_bytes(self, stats, feat_dim: int) -> Dict[str, float]:
+        """Per-stage predicted wire bytes per epoch (amortized over cd),
+        from a ``graph.remote.CommStats``. This is the prediction the
+        comm_volume benchmark checks against the realized plan volumes.
+
+        The cd amortization models an async runtime that skips sends on
+        stale epochs; the jit-lowered step executes every stage's
+        collectives regardless (see :meth:`run_layer`), so HLO-parsed
+        collective bytes are the *un*-amortized per-epoch figure."""
+        return {
+            s.level: stats.volume_bytes(
+                feat_dim, bits=s.bits or 32,
+                stage=None if s.level == "flat" else s.level, cd=s.cd)
+            for s in self.stages
+        }

@@ -10,13 +10,17 @@ One exchange per GCN layer (Fig 2 steps 4–6):
      to the max pair volume because XLA requires static shapes);
   4. dequantize and scatter-add received rows into the local aggregation.
 
+The exchange machinery itself lives in :mod:`repro.core.exchange` — plan
+containers, the fp32/quantized wire primitives (one shared quantized
+custom-VJP for every topology), and the composable
+:class:`~repro.core.exchange.ExchangeSchedule` the trainer dispatches
+through. This module keeps the historical convenience API: single-call
+flat and hierarchical exchanges, expressed as one-off schedules over the
+same primitives.
+
 Works under ``shard_map`` (real devices) and ``jax.vmap`` (virtual workers
 on one device — numerically identical, used by tests), since both implement
 the named-axis collective semantics.
-
-Backward pass: the VJP of the exchange is the reverse exchange; with
-quantization enabled the cotangents are quantized too (the paper's Lemma 1
-covers this — stochastic rounding keeps the gradient unbiased).
 
 Hierarchical (two-level) exchange — the paper's contribution (2)
 ----------------------------------------------------------------
@@ -39,9 +43,6 @@ links) and ``node_axis`` (W workers inside a node, fast links) — and runs:
      group's deduplicated rows) -> ``all_gather`` over ``node_axis`` (fan
      the received group buffers out to the destination workers).
 
-The inter pipeline is self-transpose (reduce-scatter^T = all-gather,
-all_to_all^T = all_to_all), so the quantized custom VJP simply re-applies
-the same exchange to the cotangents, mirroring the flat quantized path.
 Group-level classification both *dedups* raw post rows across the
 destination group's workers (a hub source crossing to 3 workers of one
 node crosses once, not 3x) and *merges* pre-aggregated partials across the
@@ -52,96 +53,42 @@ one worker of a remote group (always, on power-law graphs).
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.quant.stochastic import QuantParams, dequantize, quantize
+from repro.core.exchange import (
+    DeviceHaloPlan,
+    DeviceHierPlan,
+    StageTopo,
+    assemble_send,
+    scatter_recv,
+    stack_halo_plan,
+    stack_hier_plan,
+    stage_exchange,
+)
 
-
-class DeviceHaloPlan(NamedTuple):
-    """Per-worker slices of graph.remote.HaloPlan, as device arrays.
-
-    Leading axis of each array in the *stacked* plan is the worker axis;
-    inside shard_map/vmap each worker sees its own slice (no leading axis).
-    """
-
-    send_gather_idx: jax.Array   # [P*R] int32
-    send_gather_mask: jax.Array  # [P*R] bool
-    pre_src: jax.Array           # [pre_nnz] int32
-    pre_slot: jax.Array          # [pre_nnz] int32
-    pre_weight: jax.Array        # [pre_nnz] f32
-    recv_row: jax.Array          # [recv_nnz] int32
-    recv_dst: jax.Array          # [recv_nnz] int32
-    recv_weight: jax.Array       # [recv_nnz] f32
-
-
-def stack_halo_plan(hp) -> DeviceHaloPlan:
-    """graph.remote.HaloPlan (host numpy, [P, ...]) -> stacked device plan."""
-    return DeviceHaloPlan(
-        send_gather_idx=jnp.asarray(hp.send_gather_idx, jnp.int32),
-        send_gather_mask=jnp.asarray(hp.send_gather_mask),
-        pre_src=jnp.asarray(hp.pre_src, jnp.int32),
-        pre_slot=jnp.asarray(hp.pre_slot, jnp.int32),
-        pre_weight=jnp.asarray(hp.pre_weight),
-        recv_row=jnp.asarray(hp.recv_row, jnp.int32),
-        recv_dst=jnp.asarray(hp.recv_dst, jnp.int32),
-        recv_weight=jnp.asarray(hp.recv_weight),
-    )
-
-
-def assemble_send(h: jax.Array, plan: DeviceHaloPlan) -> jax.Array:
-    """Build the [P*R, F] wire buffer: post raws + pre partials (Fig 2 step 4)."""
-    raw = jnp.where(plan.send_gather_mask[:, None], h[plan.send_gather_idx], 0.0)
-    send = raw.at[plan.pre_slot].add(plan.pre_weight[:, None] * h[plan.pre_src])
-    return send
-
-
-def scatter_recv(acc: jax.Array, recv: jax.Array, plan: DeviceHaloPlan) -> jax.Array:
-    """Post-aggregate received rows into the local accumulator (Fig 2 step 6)."""
-    return acc.at[plan.recv_dst].add(plan.recv_weight[:, None] * recv[plan.recv_row])
-
-
-def _a2a(x: jax.Array, axis_name: str, nparts: int) -> jax.Array:
-    """Tiled all_to_all over the worker axis on a [P*R, F] buffer."""
-    return jax.lax.all_to_all(
-        x.reshape(nparts, -1, x.shape[-1]), axis_name,
-        split_axis=0, concat_axis=0, tiled=False,
-    ).reshape(x.shape)
+__all__ = [
+    "DeviceHaloPlan",
+    "DeviceHierPlan",
+    "stack_halo_plan",
+    "stack_hier_plan",
+    "assemble_send",
+    "scatter_recv",
+    "halo_exchange_fp32",
+    "halo_exchange",
+    "aggregate_with_halo",
+    "halo_exchange_hierarchical",
+    "aggregate_with_halo_hierarchical",
+]
 
 
 def halo_exchange_fp32(
     h: jax.Array, plan: DeviceHaloPlan, axis_name: str, nparts: int
 ) -> jax.Array:
-    """FP32 exchange: returns the received [P*R, F] buffer."""
-    return _a2a(assemble_send(h, plan), axis_name, nparts)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _quantized_a2a(send, key, axis_name, nparts, bits):
-    q, params = quantize(send, bits, key)
-    qr = _a2a(q.astype(jnp.int32), axis_name, nparts)
-    # fp32 (zero, scale) ride along — the paper's "params" wire term (Eqn 5).
-    zr = _a2a(params.zero[:, None], axis_name, nparts)[:, 0]
-    sr = _a2a(params.scale[:, None], axis_name, nparts)[:, 0]
-    return dequantize(qr, QuantParams(zr, sr))
-
-
-def _quantized_a2a_fwd(send, key, axis_name, nparts, bits):
-    out = _quantized_a2a(send, key, axis_name, nparts, bits)
-    return out, key
-
-
-def _quantized_a2a_bwd(axis_name, nparts, bits, key, g):
-    # Reverse exchange of (quantized) cotangents; unbiased per Lemma 1.
-    gkey = jax.random.fold_in(key, 0x5bd1)
-    gq = _quantized_a2a(g, gkey, axis_name, nparts, bits)
-    return gq, None
-
-
-_quantized_a2a.defvjp(_quantized_a2a_fwd, _quantized_a2a_bwd)
+    """FP32 flat exchange: returns the received [P*R, F] buffer."""
+    return stage_exchange(assemble_send(h, plan),
+                          StageTopo("a2a", axis_name, nparts), 0, None)
 
 
 def halo_exchange(
@@ -153,24 +100,15 @@ def halo_exchange(
     bits: int = 0,
     key: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Full exchange: assemble -> (quantize) -> all_to_all -> (dequantize).
+    """Full flat exchange: assemble -> (quantize) -> all_to_all -> (dequantize).
 
     bits=0 means fp32 wire format (the paper's baseline); bits in {2,4,8}
     enables the communication-aware quantization scheme.
     """
-    send = assemble_send(h, plan)
-    if bits == 0:
-        return _a2a(send, axis_name, nparts)
-    if key is None:
+    if bits and key is None:
         raise ValueError("quantized halo exchange needs a PRNG key")
-    rows = send.shape[0]
-    # Quant row groups (4 rows share zero/scale) must not straddle the
-    # per-destination chunks — pad rows_per_pair to a multiple of 4.
-    if (rows // nparts) % 4:
-        raise ValueError(
-            f"rows_per_pair {rows // nparts} must be a multiple of the quant row group (4)"
-        )
-    return _quantized_a2a(send, key, axis_name, nparts, bits)
+    return stage_exchange(assemble_send(h, plan),
+                          StageTopo("a2a", axis_name, nparts), bits, key)
 
 
 def aggregate_with_halo(
@@ -186,104 +124,6 @@ def aggregate_with_halo(
     """local aggregation + remote pre/post contributions -> full AGGREGATE."""
     recv = halo_exchange(h, plan, axis_name, nparts, bits=bits, key=key)
     return scatter_recv(local_agg, recv, plan)
-
-
-# --------------------------------------------------------------------------
-# Hierarchical two-level exchange (module docstring, "Hierarchical" section)
-# --------------------------------------------------------------------------
-
-
-class DeviceHierPlan(NamedTuple):
-    """Two DeviceHaloPlan's: intra (rank chunks) + inter (group chunks)."""
-
-    intra: DeviceHaloPlan
-    inter: DeviceHaloPlan
-
-
-def stack_hier_plan(hp) -> DeviceHierPlan:
-    """graph.remote.HierHaloPlan (host numpy) -> stacked device plan."""
-    return DeviceHierPlan(
-        intra=stack_halo_plan(hp.intra),
-        inter=stack_halo_plan(hp.inter),
-    )
-
-
-def _inter_exchange_fp32(x: jax.Array, node_axis: str, group_axis: str,
-                         group_size: int, num_groups: int) -> jax.Array:
-    """reduce-scatter(node) -> all_to_all(group) -> all_gather(node).
-
-    ``x``: this worker's additive contribution to the group send buffer,
-    [G*R_e, F]. Returns the reassembled group recv buffer, [G*R_e, F],
-    chunk gq at offset gq*R_e. Plain collectives — JAX's built-in
-    transposes give the correct (exact) VJP.
-    """
-    rows, feat = x.shape
-    slice_rows = rows // (num_groups * group_size)
-    y = x.reshape(num_groups, group_size, slice_rows, feat)
-    # Per-group aggregation: partials merge, and the group buffer lands
-    # sharded 1/W per worker — each worker fronts 1/W of the slow traffic.
-    shard = jax.lax.psum_scatter(y, node_axis, scatter_dimension=1,
-                                 tiled=False)                 # [G, Rw, F]
-    recv = jax.lax.all_to_all(shard, group_axis,
-                              split_axis=0, concat_axis=0)    # [G, Rw, F]
-    full = jax.lax.all_gather(recv, node_axis, axis=1,
-                              tiled=False)                    # [G, W, Rw, F]
-    return full.reshape(rows, feat)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def _inter_exchange_quantized(x, key, node_axis, group_axis, group_size,
-                              num_groups, bits):
-    """Quantized inter level: only the slow all_to_all carries int payload.
-
-    The group buffer is quantized *after* the psum_scatter (the merged
-    partials are what crosses the network) and dequantized before the
-    intra-group all_gather fan-out.
-    """
-    rows, feat = x.shape
-    slice_rows = rows // (num_groups * group_size)
-    y = x.reshape(num_groups, group_size, slice_rows, feat)
-    shard = jax.lax.psum_scatter(y, node_axis, scatter_dimension=1,
-                                 tiled=False)                 # [G, Rw, F]
-    flat = shard.reshape(num_groups * slice_rows, feat)
-    q, params = quantize(flat, bits, key)
-
-    def a2a(v, per_chunk):
-        return jax.lax.all_to_all(v.reshape(num_groups, per_chunk, -1),
-                                  group_axis, split_axis=0, concat_axis=0)
-
-    # zero/scale are per 4-row quant group; slice_rows % 4 == 0 keeps the
-    # group boundaries aligned with the per-destination-group chunks.
-    qr = a2a(q.astype(jnp.int32), slice_rows)
-    zr = a2a(params.zero[:, None], slice_rows // 4).reshape(-1)
-    sr = a2a(params.scale[:, None], slice_rows // 4).reshape(-1)
-    deq = dequantize(qr.reshape(num_groups * slice_rows, feat),
-                     QuantParams(zr, sr))
-    recv = deq.reshape(num_groups, slice_rows, feat)
-    full = jax.lax.all_gather(recv, node_axis, axis=1, tiled=False)
-    return full.reshape(rows, feat)
-
-
-def _inter_exchange_quantized_fwd(x, key, node_axis, group_axis, group_size,
-                                  num_groups, bits):
-    out = _inter_exchange_quantized(x, key, node_axis, group_axis,
-                                    group_size, num_groups, bits)
-    return out, key
-
-
-def _inter_exchange_quantized_bwd(node_axis, group_axis, group_size,
-                                  num_groups, bits, key, g):
-    # The fp32 inter pipeline is self-transpose (RS^T = AG, A2A^T = A2A),
-    # so the reverse exchange IS the same exchange — quantized cotangents
-    # stay unbiased per Lemma 1, mirroring the flat quantized path.
-    gkey = jax.random.fold_in(key, 0x9e37)
-    gq = _inter_exchange_quantized(g, gkey, node_axis, group_axis,
-                                   group_size, num_groups, bits)
-    return gq, None
-
-
-_inter_exchange_quantized.defvjp(_inter_exchange_quantized_fwd,
-                                 _inter_exchange_quantized_bwd)
 
 
 def halo_exchange_hierarchical(
@@ -304,24 +144,14 @@ def halo_exchange_hierarchical(
     the intra all_to_all via the flat quantized path and the inter
     all_to_all via the group-aggregated quantized path.
     """
-    send_i = assemble_send(h, plan.intra)
-    send_e = assemble_send(h, plan.inter)
-    if bits == 0:
-        recv_i = _a2a(send_i, node_axis, group_size)
-        recv_e = _inter_exchange_fp32(send_e, node_axis, group_axis,
-                                      group_size, num_groups)
-        return recv_i, recv_e
-    if key is None:
+    if bits and key is None:
         raise ValueError("quantized hierarchical halo exchange needs a PRNG key")
-    if (send_i.shape[0] // group_size) % 4:
-        raise ValueError("intra rows_per_pair must be a multiple of 4")
-    if (send_e.shape[0] // (num_groups * group_size)) % 4:
-        raise ValueError("inter rows per worker slice must be a multiple of 4")
-    ki = jax.random.fold_in(key, 1)
-    ke = jax.random.fold_in(key, 2)
-    recv_i = _quantized_a2a(send_i, ki, node_axis, group_size, bits)
-    recv_e = _inter_exchange_quantized(send_e, ke, node_axis, group_axis,
-                                       group_size, num_groups, bits)
+    topo_i = StageTopo("a2a", node_axis, group_size)
+    topo_e = StageTopo("grouped", group_axis, num_groups, node_axis, group_size)
+    ki = jax.random.fold_in(key, 1) if key is not None else None
+    ke = jax.random.fold_in(key, 2) if key is not None else None
+    recv_i = stage_exchange(assemble_send(h, plan.intra), topo_i, bits, ki)
+    recv_e = stage_exchange(assemble_send(h, plan.inter), topo_e, bits, ke)
     return recv_i, recv_e
 
 

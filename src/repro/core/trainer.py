@@ -30,13 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as M
+from repro.core.exchange import ExchangeSchedule, StageSpec
 from repro.core.halo import (
     DeviceHaloPlan,
     DeviceHierPlan,
-    aggregate_with_halo,
-    aggregate_with_halo_hierarchical,
-    halo_exchange,
-    scatter_recv,
     stack_halo_plan,
     stack_hier_plan,
 )
@@ -182,6 +179,15 @@ class DistConfig:
     group_size: int = 0
     node_axis: str = "node"
     group_axis: str = "group"
+    # Per-stage overrides for the hierarchical exchange schedule; None means
+    # inherit ``bits`` / ``cd``. E.g. inter_bits=2 + bits=0 is the mixed
+    # "Int2 slow wire, fp32 fast wire" schedule; inter_cd=4 + cd=1 refreshes
+    # the inter-group buffer every 4 epochs while the intra level stays
+    # fresh (stale inter, fresh intra — the paper-faithful configuration).
+    intra_bits: Optional[int] = None
+    inter_bits: Optional[int] = None
+    intra_cd: Optional[int] = None
+    inter_cd: Optional[int] = None
 
     def __post_init__(self):
         if self.num_groups or self.group_size:
@@ -193,12 +199,38 @@ class DistConfig:
                 raise ValueError(
                     f"num_groups * group_size ({self.num_groups}x"
                     f"{self.group_size}) must equal nparts ({self.nparts})")
+        elif any(v is not None for v in (self.intra_bits, self.inter_bits,
+                                         self.intra_cd, self.inter_cd)):
+            raise ValueError(
+                "intra_/inter_ stage overrides need a hierarchical "
+                "DistConfig (num_groups/group_size)")
+        self.schedule()  # validate bits/cd via StageSpec
 
     @property
     def hierarchical(self) -> bool:
         # num_groups=1 is the degenerate-but-valid G=1 endpoint of a G x W
         # sweep: the inter level is an identity exchange over a size-1 axis.
         return self.num_groups >= 1 and self.group_size >= 1
+
+    def schedule(self) -> ExchangeSchedule:
+        """The composable exchange schedule this config describes."""
+        if self.hierarchical:
+            pick = lambda override, default: default if override is None else override
+            return ExchangeSchedule.hierarchical(
+                self.num_groups, self.group_size,
+                intra_bits=pick(self.intra_bits, self.bits),
+                inter_bits=pick(self.inter_bits, self.bits),
+                intra_cd=pick(self.intra_cd, self.cd),
+                inter_cd=pick(self.inter_cd, self.cd),
+                node_axis=self.node_axis, group_axis=self.group_axis)
+        return ExchangeSchedule.flat(self.nparts, bits=self.bits, cd=self.cd,
+                                     axis_name=self.axis_name)
+
+    def sync_fp32(self) -> "DistConfig":
+        """This config with every stage forced to fresh fp32 (eval wire)."""
+        return dataclasses.replace(
+            self, bits=0, cd=1,
+            intra_bits=None, inter_bits=None, intra_cd=None, inter_cd=None)
 
     @property
     def psum_axes(self):
@@ -279,33 +311,27 @@ def _local_aggregate(h: jax.Array, wd: WorkerData) -> jax.Array:
 
 def _dist_forward(params, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
                   prop_mask, key, train: bool,
-                  halo_cache: Optional[List[jax.Array]] = None,
-                  refresh=None):
-    """Per-worker forward. Returns (logits, new_halo_cache)."""
-    new_cache: List[jax.Array] = []
+                  halo_cache=None, epoch=None, schedule=None):
+    """Per-worker forward, dispatched through the exchange schedule.
+
+    ``halo_cache`` is the schedule-owned per-layer pytree (one stale recv
+    buffer per delayed stage per layer); ``epoch`` drives each stage's
+    refresh. With no cache provided the schedule runs fully sync (every
+    stage fresh — the eval semantics). Returns (logits, new_halo_cache).
+    """
+    sched = schedule if schedule is not None else dc.schedule()
+    if halo_cache is None and sched.uses_cache:
+        sched = sched.as_sync()
+    new_cache: List = []
 
     def agg_fn_factory(dropout_key):
         def agg_fn(l: int, h: jax.Array) -> jax.Array:
             local = _local_aggregate(h, wd)
             kq = jax.random.fold_in(key, 7919 + l) if key is not None else None
-            if dc.hierarchical:
-                agg = aggregate_with_halo_hierarchical(
-                    h, local, wd.hier_plan, dc.node_axis, dc.group_axis,
-                    dc.group_size, dc.num_groups, bits=dc.bits, key=kq)
-                new_cache.append(jnp.zeros((0,)))
-            elif halo_cache is None:
-                agg = aggregate_with_halo(h, local, wd.plan, dc.axis_name,
-                                          dc.nparts, bits=dc.bits, key=kq)
-                new_cache.append(jnp.zeros((0,)))
-            else:
-                # DistGNN-style delayed comm: refresh the halo every cd epochs,
-                # otherwise reuse the stale buffer (stop-gradient, async-like).
-                fresh = halo_exchange(h, wd.plan, dc.axis_name, dc.nparts,
-                                      bits=dc.bits, key=kq)
-                stale = jax.lax.stop_gradient(halo_cache[l])
-                recv = jnp.where(refresh, fresh, stale)
-                new_cache.append(jax.lax.stop_gradient(recv))
-                agg = scatter_recv(local, recv, wd.plan)
+            entry = halo_cache[l] if halo_cache is not None else None
+            agg, ne = sched.run_layer(h, local, wd, kq,
+                                      cache_entry=entry, epoch=epoch)
+            new_cache.append(ne)
             return agg
         return agg_fn
 
@@ -316,9 +342,10 @@ def _dist_forward(params, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
 
 
 def make_dist_train_step(cfg: M.GCNConfig, dc: DistConfig, use_cache: bool = False):
-    """Returns worker_fn(params, wd, key[, cache, refresh]) -> (grads, metrics[, cache])."""
+    """Returns worker_fn(params, wd, key[, cache, epoch]) -> (grads, metrics[, cache])."""
+    schedule = dc.schedule()
 
-    def worker_fn(params, wd: WorkerData, key, cache=None, refresh=None):
+    def worker_fn(params, wd: WorkerData, key, cache=None, epoch=None):
         if dc.hierarchical:
             widx = (jax.lax.axis_index(dc.group_axis) * dc.group_size
                     + jax.lax.axis_index(dc.node_axis))
@@ -331,11 +358,12 @@ def make_dist_train_step(cfg: M.GCNConfig, dc: DistConfig, use_cache: bool = Fal
             prop_mask = jnp.zeros_like(prop_mask)
             loss_mask = wd.train_mask
 
-        cache_out: List[jax.Array] = []
+        cache_out: List = []
 
         def loss_fn(p):
             logits, nc = _dist_forward(p, cfg, dc, wd, prop_mask, kw, True,
-                                       halo_cache=cache, refresh=refresh)
+                                       halo_cache=cache, epoch=epoch,
+                                       schedule=schedule)
             cache_out.extend(nc)
             ls, correct, cnt = M.loss_and_metrics(logits, wd.labels, loss_mask)
             # Global mean loss: psum both numerator and denominator.
@@ -359,8 +387,7 @@ def make_dist_eval(cfg: M.GCNConfig, dc: DistConfig):
     def worker_fn(params, wd: WorkerData):
         prop = wd.train_mask if cfg.label_prop else jnp.zeros_like(wd.train_mask)
         # Eval always uses fp32 fresh halo (accuracy measurement).
-        dc_eval = dataclasses.replace(dc, bits=0, cd=1)
-        logits, _ = _dist_forward(params, cfg, dc_eval, wd, prop,
+        logits, _ = _dist_forward(params, cfg, dc.sync_fp32(), wd, prop,
                                   jax.random.PRNGKey(0), False)
         _, correct, cnt = M.loss_and_metrics(logits, wd.labels, wd.eval_mask)
         return (jax.lax.psum(correct, dc.psum_axes),
@@ -374,10 +401,11 @@ class DistributedTrainer:
     def __init__(self, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
                  mode: str = "vmap", mesh=None, seed: int = 0):
         self.cfg, self.dc, self.wd, self.mode = cfg, dc, wd, mode
+        self.schedule = dc.schedule()
         self.params = M.init_params(jax.random.PRNGKey(seed), cfg)
         self.opt_state = adamw_init(self.params)
         self.epoch = 0
-        self.use_cache = dc.cd > 1
+        self.use_cache = self.schedule.uses_cache
         self._cache = None
         if dc.hierarchical and wd.hier_plan is None:
             raise ValueError(
@@ -387,11 +415,12 @@ class DistributedTrainer:
             raise ValueError(
                 "WorkerData carries a hierarchical plan; set num_groups/"
                 "group_size on DistConfig (wd.plan is None)")
-        if self.use_cache and dc.hierarchical:
-            raise NotImplementedError(
-                "delayed-comm (cd>1) currently runs on the flat exchange only")
         worker_step = make_dist_train_step(cfg, dc, use_cache=self.use_cache)
         worker_eval = make_dist_eval(cfg, dc)
+        # (params, wd, key[, cache, epoch]): workers map their leading axis
+        # of wd and cache; params/key/epoch are replicated.
+        step_axes = ((None, 0, None, 0, None) if self.use_cache
+                     else (None, 0, None))
 
         if dc.hierarchical and mode == "vmap":
             # Virtual two-level mesh: workers [P, ...] -> [G, W, ...] and a
@@ -400,19 +429,14 @@ class DistributedTrainer:
             self.wd = jax.tree_util.tree_map(
                 lambda a: a.reshape(G, W, *a.shape[1:]), wd)
             self._step = jax.jit(jax.vmap(jax.vmap(
-                worker_step, axis_name=dc.node_axis, in_axes=(None, 0, None)),
-                axis_name=dc.group_axis, in_axes=(None, 0, None)))
+                worker_step, axis_name=dc.node_axis, in_axes=step_axes),
+                axis_name=dc.group_axis, in_axes=step_axes))
             self._eval = jax.jit(jax.vmap(jax.vmap(
                 worker_eval, axis_name=dc.node_axis, in_axes=(None, 0)),
                 axis_name=dc.group_axis, in_axes=(None, 0)))
         elif mode == "vmap":
-            if self.use_cache:
-                self._step = jax.jit(jax.vmap(
-                    worker_step, axis_name=dc.axis_name,
-                    in_axes=(None, 0, None, 0, None)))
-            else:
-                self._step = jax.jit(jax.vmap(
-                    worker_step, axis_name=dc.axis_name, in_axes=(None, 0, None)))
+            self._step = jax.jit(jax.vmap(
+                worker_step, axis_name=dc.axis_name, in_axes=step_axes))
             self._eval = jax.jit(jax.vmap(
                 worker_eval, axis_name=dc.axis_name, in_axes=(None, 0)))
         elif mode == "shard_map":
@@ -428,23 +452,41 @@ class DistributedTrainer:
             else:
                 data_axes = dc.axis_name
             spec_data = jax.tree_util.tree_map(lambda _: P(data_axes), wd)
-            if self.use_cache:
-                raise NotImplementedError("cd>1 currently runs in vmap mode")
 
             def _squeeze(tree):
                 # shard_map keeps the sharded axis as size-1 (vmap strips it)
                 return jax.tree_util.tree_map(lambda x: x[0], tree)
 
-            def step_sm(params, wdata, key):
-                return worker_step(params, _squeeze(wdata), key)
+            if self.use_cache:
+                # Per-stage halo cache: sharded over the worker axis exactly
+                # like wd; structure is [layers][delayed stages].
+                cache_spec = [tuple(P(data_axes)
+                                    for _ in self.schedule.delayed_indices)
+                              for _ in range(cfg.num_layers)]
+
+                def step_sm(params, wdata, key, cache, epoch):
+                    g, m, c = worker_step(params, _squeeze(wdata), key,
+                                          _squeeze(cache), epoch)
+                    # restore the size-1 sharded axis on the cache output
+                    c = jax.tree_util.tree_map(lambda x: x[None], c)
+                    return g, m, c
+
+                self._step = jax.jit(shard_map(
+                    step_sm, mesh=mesh,
+                    in_specs=(P(), spec_data, P(), cache_spec, P()),
+                    out_specs=(P(), P(), cache_spec), check_rep=False))
+            else:
+                def step_sm(params, wdata, key):
+                    return worker_step(params, _squeeze(wdata), key)
+
+                self._step = jax.jit(shard_map(
+                    step_sm, mesh=mesh,
+                    in_specs=(P(), spec_data, P()),
+                    out_specs=(P(), P()), check_rep=False))
 
             def eval_sm(params, wdata):
                 return worker_eval(params, _squeeze(wdata))
 
-            self._step = jax.jit(shard_map(
-                step_sm, mesh=mesh,
-                in_specs=(P(), spec_data, P()),
-                out_specs=(P(), P()), check_rep=False))
             self._eval = jax.jit(shard_map(
                 eval_sm, mesh=mesh,
                 in_specs=(P(), spec_data), out_specs=(P(), P()), check_rep=False))
@@ -458,23 +500,47 @@ class DistributedTrainer:
             return jax.tree_util.tree_map(lambda x: x[0], tree)
         return tree
 
+    def _step_args(self, key) -> tuple:
+        """Assemble the _step argument tuple (lazily zero-filling the
+        schedule-owned halo cache; epoch 0 always refreshes)."""
+        if not self.use_cache:
+            return (self.params, self.wd, key)
+        if self._cache is None:
+            # Layer l exchanges features of width dims()[l] (in_dim for the
+            # first layer, hidden_dim after). Leading dims mirror wd's
+            # stacked worker axes ((P,) flat, (G, W) nested vmap).
+            dims = self.cfg.dims()[: self.cfg.num_layers]
+            self._cache = self.schedule.init_cache(
+                self.wd, dims, lead=self.wd.x.shape[:-2])
+        return (self.params, self.wd, key, self._cache,
+                jnp.asarray(self.epoch, jnp.int32))
+
+    def lower_step(self, key=None):
+        """Lower (without running) one training step — the dry-run hook.
+
+        The halo cache is passed as ShapeDtypeStructs so lowering a
+        delayed-comm schedule at production scale never materializes the
+        (potentially huge) stale buffers.
+        """
+        key = key if key is not None else jax.random.PRNGKey(0)
+        if self.use_cache and self._cache is None:
+            dims = self.cfg.dims()[: self.cfg.num_layers]
+            rows = self.schedule.cache_rows(self.wd)
+            lead = self.wd.x.shape[:-2]
+            cache = [tuple(jax.ShapeDtypeStruct((*lead, r, f), jnp.float32)
+                           for r in rows) for f in dims]
+            return self._step.lower(self.params, self.wd, key, cache,
+                                    jnp.asarray(0, jnp.int32))
+        return self._step.lower(*self._step_args(key))
+
     def train_epoch(self) -> Dict[str, float]:
         key = jax.random.PRNGKey(1000003 + self.epoch)
+        args = self._step_args(key)
         if self.use_cache:
-            if self._cache is None:
-                # Epoch 0 always refreshes; initialize zero cache lazily.
-                # Layer l exchanges features of width dims()[l] (in_dim for
-                # the first layer, hidden_dim after).
-                dims = self.cfg.dims()
-                P_, rows = self.wd.plan.send_gather_idx.shape[:2]
-                self._cache = [jnp.zeros((P_, rows, dims[l]))
-                               for l in range(self.cfg.num_layers)]
-            refresh = jnp.asarray(self.epoch % self.dc.cd == 0)
-            grads, metrics, cache = self._step(self.params, self.wd, key,
-                                               self._cache, refresh)
+            grads, metrics, cache = self._step(*args)
             self._cache = cache
         else:
-            grads, metrics = self._step(self.params, self.wd, key)
+            grads, metrics = self._step(*args)
         grads = self._unreplicate(grads)
         metrics = self._unreplicate(metrics)
         self.params, self.opt_state = adamw_update(

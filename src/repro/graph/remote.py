@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.graph.mvc import min_vertex_cover_bipartite, verify_cover
+from repro.quant.stochastic import wire_bytes as quant_wire_bytes
 from repro.graph.partition import partition_graph, partition_hierarchical
 from repro.graph.structure import CSR, Graph, coo_to_csr
 
@@ -103,9 +104,36 @@ class CommStats:
             return 1.0
         return self.flat_inter_rows / self.inter_rows
 
-    def volume_bytes(self, feat_dim: int, bits: int = 32, strategy: str = None) -> float:
-        v = getattr(self, strategy or self.selected)
-        return v * feat_dim * bits / 8
+    def stage_rows(self, stage: Optional[str] = None,
+                   strategy: Optional[str] = None) -> int:
+        """Logical feature rows one exchange stage sends per epoch.
+
+        ``stage`` None/"flat" -> the flat exchange under ``strategy`` (or
+        the selected one); "intra"/"inter" -> the realized two-level rows.
+        """
+        if stage in (None, "flat"):
+            return getattr(self, strategy or self.selected)
+        if stage == "intra":
+            return self.intra_rows
+        if stage == "inter":
+            return self.inter_rows
+        raise ValueError(f"unknown stage {stage!r}")
+
+    def volume_bytes(self, feat_dim: int, bits: int = 32,
+                     strategy: str = None, stage: str = None,
+                     cd: int = 1) -> float:
+        """Predicted wire bytes per epoch for one exchange stage.
+
+        ``bits`` 32/0 -> fp32 rows; 2/4/8 -> quantized payload plus the
+        fp32 (zero, scale) pair per 4-row quant group (Eqn 5's params
+        term). ``cd`` amortizes a delayed-comm stage over its refresh
+        period. This is the prediction the exchange schedule's realized
+        per-stage volumes are checked against (benchmarks/comm_volume.py).
+        """
+        rows = self.stage_rows(stage, strategy)
+        if bits in (0, 32):
+            return rows * feat_dim * 4.0 / cd
+        return quant_wire_bytes(rows, feat_dim, bits) / cd
 
     def as_dict(self) -> dict:
         d = {

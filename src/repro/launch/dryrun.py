@@ -248,56 +248,61 @@ def _finish(rec: dict, t0: float, save: bool) -> dict:
     return rec
 
 
-def run_gcn_dryrun(multi_pod: bool, save: bool = True) -> dict:
-    """Dry-run the paper's own distributed GCN trainer on the production mesh
-    (1-D graph-parallel over all chips)."""
+def run_gcn_dryrun(multi_pod: bool, save: bool = True, groups: int = 0,
+                   bits: int = 2, cd: int = 1) -> dict:
+    """Dry-run the paper's distributed GCN trainer on the production mesh,
+    dispatched through its ExchangeSchedule.
+
+    ``groups=0`` is 1-D graph-parallel over all chips (flat schedule);
+    ``groups=G`` lowers the two-level (group, node) shard_map trainer on a
+    G x (chips/G) mesh. ``bits``/``cd`` thread straight into the schedule,
+    so e.g. ``--groups 16 --cd 4`` dry-runs delayed-comm on the
+    hierarchical exchange. The record carries the schedule description and
+    the CommStats per-stage wire-byte predictions next to the collective
+    bytes parsed from the partitioned HLO.
+    """
     import numpy as np
-    from repro.core import DistConfig, GCNConfig
-    from repro.core.trainer import make_dist_train_step, WorkerData, prepare_distributed
-    from repro.graph import build_partitioned_graph, rmat_graph
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
+    from repro.core import DistConfig, DistributedTrainer, GCNConfig
+    from repro.core.trainer import prepare_distributed
+    from repro.graph import (build_hierarchical_partitioned_graph,
+                             build_partitioned_graph, rmat_graph)
+    from repro.launch.mesh import make_hier_worker_mesh
 
     mesh_name = "2x16x16" if multi_pod else "16x16"
-    rec = {"arch": "supergcn-graphsage", "shape": "rmat18-fullbatch",
+    shape_name = "rmat13-fullbatch" + (f"-g{groups}" if groups else "")
+    rec = {"arch": "supergcn-graphsage", "shape": shape_name,
            "mesh": mesh_name, "chips": 512 if multi_pod else 256, "status": "ok"}
     t0 = time.time()
     try:
         nparts = 512 if multi_pod else 256
-        gmesh = make_worker_mesh(nparts)
         # Structural stand-in graph (host preprocessing at laptop scale).
         g = rmat_graph(13, edge_factor=8, seed=7).mean_normalized()
         g.labels = np.zeros(g.num_nodes, np.int32)
         g.train_mask = np.ones(g.num_nodes, bool)
-        pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
         feat = 128
         x = np.zeros((g.num_nodes, feat), np.float32)
+        if groups:
+            if nparts % groups:
+                raise ValueError(f"--groups {groups} must divide {nparts}")
+            group_size = nparts // groups
+            gmesh = make_hier_worker_mesh(groups, group_size)
+            dc = DistConfig(nparts=nparts, bits=bits, cd=cd,
+                            num_groups=groups, group_size=group_size)
+            pg = build_hierarchical_partitioned_graph(
+                g, groups, group_size, strategy="hybrid", seed=0)
+        else:
+            gmesh = make_worker_mesh(nparts)
+            dc = DistConfig(nparts=nparts, bits=bits, cd=cd)
+            pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
         wd = prepare_distributed(g, x, pg)
         cfg = GCNConfig(model="sage", in_dim=feat, hidden_dim=256,
-                        num_classes=40, num_layers=3, quant_bits=2)
-        dc = DistConfig(nparts=nparts, bits=2)
-        worker0 = make_dist_train_step(cfg, dc)
-
-        def worker(params, wdata, key):
-            # shard_map keeps the sharded leading axis as size 1 — strip it.
-            wdata = jax.tree_util.tree_map(lambda x: x[0], wdata)
-            return worker0(params, wdata, key)
-        from repro.core.model import init_params
-        params = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
-        pspec = jax.tree_util.tree_map(lambda _: P(), params)
-        dspec = jax.tree_util.tree_map(lambda _: P(dc.axis_name), wd)
-        step = shard_map(worker, mesh=gmesh,
-                         in_specs=(P(), dspec, P()), out_specs=(P(), P()),
-                         check_rep=False)
-        p_sds = jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
-                                           sharding=NamedSharding(gmesh, P())), params)
-        wd_sds = jax.tree_util.tree_map(
-            lambda a, sp: jax.ShapeDtypeStruct(
-                a.shape, a.dtype, sharding=NamedSharding(gmesh, sp)), wd, dspec)
-        key = jax.ShapeDtypeStruct((2,), jnp.uint32,
-                                   sharding=NamedSharding(gmesh, P()))
-        lowered = jax.jit(step).lower(p_sds, wd_sds, key)
+                        num_classes=40, num_layers=3, quant_bits=bits)
+        trainer = DistributedTrainer(cfg, dc, wd, mode="shard_map",
+                                     mesh=gmesh, seed=0)
+        rec["schedule"] = trainer.schedule.describe()
+        rec["predicted_wire_bytes"] = trainer.schedule.wire_volume_bytes(
+            pg.stats, feat)
+        lowered = trainer.lower_step()
         t1 = time.time()
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 2)
@@ -321,11 +326,19 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--gcn", action="store_true",
                     help="dry-run the SuperGCN distributed trainer")
+    ap.add_argument("--groups", type=int, default=0,
+                    help="with --gcn: num_groups for the hierarchical "
+                         "(group, node) trainer (0 = flat 1-D)")
+    ap.add_argument("--bits", type=int, default=2, choices=(0, 2, 4, 8),
+                    help="with --gcn: wire format for the exchange schedule")
+    ap.add_argument("--cd", type=int, default=1,
+                    help="with --gcn: delayed-comm refresh period")
     ap.add_argument("--hlo-out", action="store_true")
     args = ap.parse_args()
 
     if args.gcn:
-        run_gcn_dryrun(args.multi_pod)
+        run_gcn_dryrun(args.multi_pod, groups=args.groups, bits=args.bits,
+                       cd=args.cd)
         return
     if args.all:
         results = []

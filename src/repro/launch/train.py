@@ -24,7 +24,8 @@ def run_gcn(args):
     import numpy as np
     from repro.core import (DistConfig, GCNConfig, DistributedTrainer,
                             prepare_distributed)
-    from repro.graph import build_partitioned_graph, sbm_graph
+    from repro.graph import (build_hierarchical_partitioned_graph,
+                             build_partitioned_graph, sbm_graph)
     from repro.graph.generators import sbm_features
 
     g = sbm_graph(args.nodes, args.classes, avg_degree=args.degree,
@@ -33,21 +34,41 @@ def run_gcn(args):
     gn = g.mean_normalized()
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
           f"{args.classes} classes")
-    pg = build_partitioned_graph(gn, args.nparts, strategy=args.strategy,
-                                 seed=args.seed)
+    groups = args.groups
+    if not groups and (args.inter_bits is not None or args.inter_cd is not None):
+        raise SystemExit("--inter-bits/--inter-cd are per-stage overrides of "
+                         "the hierarchical schedule; pass --groups as well")
+    if groups:
+        if args.nparts % groups:
+            raise SystemExit(f"--groups {groups} must divide --nparts")
+        group_size = args.nparts // groups
+        pg = build_hierarchical_partitioned_graph(
+            gn, groups, group_size, strategy=args.strategy, seed=args.seed)
+        dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd,
+                        lr=args.lr, num_groups=groups, group_size=group_size,
+                        inter_bits=args.inter_bits, inter_cd=args.inter_cd)
+    else:
+        pg = build_partitioned_graph(gn, args.nparts, strategy=args.strategy,
+                                     seed=args.seed)
+        dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd,
+                        lr=args.lr)
     s = pg.stats
     print(f"partition comm volumes: vanilla={s.vanilla} pre={s.pre} "
           f"post={s.post} hybrid={s.hybrid} (selected={s.selected})")
+    print(f"exchange schedule: {dc.schedule().describe()}")
     wd = prepare_distributed(gn, x, pg)
     cfg = GCNConfig(model=args.model, in_dim=args.feat_dim, hidden_dim=args.hidden,
                     num_classes=args.classes, num_layers=3, dropout=0.5,
                     label_prop=args.lp, quant_bits=args.bits)
-    dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd, lr=args.lr)
     mode = args.mode
     mesh = None
     if mode == "shard_map":
-        from repro.launch.mesh import make_worker_mesh
-        mesh = make_worker_mesh(args.nparts)
+        if groups:
+            from repro.launch.mesh import make_hier_worker_mesh
+            mesh = make_hier_worker_mesh(groups, args.nparts // groups)
+        else:
+            from repro.launch.mesh import make_worker_mesh
+            mesh = make_worker_mesh(args.nparts)
     tr = DistributedTrainer(cfg, dc, wd, mode=mode, mesh=mesh, seed=args.seed)
     t0 = time.time()
     hist = tr.fit(args.epochs, log_every=max(args.epochs // 10, 1))
@@ -106,6 +127,16 @@ def main():
     ap.add_argument("--no-lp", dest="lp", action="store_false")
     ap.add_argument("--cd", type=int, default=1,
                     help="delayed-comm period (DistGNN baseline; 1=sync)")
+    ap.add_argument("--groups", type=int, default=0,
+                    help="num_groups for the hierarchical two-level "
+                         "exchange (0 = flat; group_size = nparts/groups)")
+    ap.add_argument("--inter-bits", type=int, default=None,
+                    choices=[0, 2, 4, 8],
+                    help="override the inter-group stage's wire bits "
+                         "(e.g. Int2 slow wire + fp32 fast wire)")
+    ap.add_argument("--inter-cd", type=int, default=None,
+                    help="override the inter-group stage's refresh period "
+                         "(stale inter, fresh intra)")
     ap.add_argument("--epochs", type=int, default=50)
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--mode", default="vmap", choices=["vmap", "shard_map"])

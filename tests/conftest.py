@@ -1,8 +1,17 @@
 import os
 
-# Keep CPU test runs deterministic and quiet. NOTE: the 512-device XLA flag
-# is intentionally NOT set here — only launch/dryrun.py uses it.
+# Keep CPU test runs deterministic and quiet.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# A small pool of virtual host devices so shard_map parity tests (e.g.
+# delayed-comm vmap-vs-shard_map in test_exchange_schedule.py) can build
+# real worker meshes in-process. Must happen before the jax backend
+# initializes; the 512-device production flag stays confined to
+# launch/dryrun.py (exercised via subprocess).
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
 
 import numpy as np
 import pytest
