@@ -1,7 +1,7 @@
 # Tier-1 verification (same command as ROADMAP.md).
 PY ?= python
 
-.PHONY: check check-fast bench-comm bench-comm-sweep
+.PHONY: check check-fast bench-comm bench-comm-sweep bench-agg
 
 check:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -18,3 +18,10 @@ SWEEP_OUT ?= bench_comm_sweep.json
 bench-comm-sweep:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/comm_volume.py \
 		--sweep --scale 11 --out $(SWEEP_OUT)
+
+# Aggregation-operator bench (Fig 8): vanilla/sorted/clustered/ell/bucketed/
+# kernel rows + JSON artifact; AGG_OUT overrides the artifact path.
+AGG_OUT ?= bench_aggregation.json
+bench-agg:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/aggregation.py \
+		--quick --out $(AGG_OUT)

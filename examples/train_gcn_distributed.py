@@ -11,12 +11,33 @@ epochs, with FP32 and DistGNN-style cd-5 comparisons.
 import argparse
 import time
 
+import jax
 import numpy as np
 
 from repro.core import (DistConfig, DistributedTrainer, GCNConfig,
                         prepare_distributed)
+from repro.core.trainer import _local_aggregate
 from repro.graph import build_partitioned_graph, partition_stats, sbm_graph
 from repro.graph.generators import sbm_features
+
+
+def time_aggregation(wd, num_layers: int, iters: int = 20) -> dict:
+    """Measured per-epoch *local aggregation* time per backend (us).
+
+    One training epoch runs ``num_layers`` forward aggregations plus their
+    transposes in the backward pass — report 2 x num_layers x per-call.
+    """
+    out = {}
+    for backend in ("coo", "ell"):
+        f = jax.jit(jax.vmap(lambda h, w: _local_aggregate(h, w, backend)))
+        jax.block_until_ready(f(wd.x, wd))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out_ = f(wd.x, wd)
+        jax.block_until_ready(out_)
+        per_call = (time.perf_counter() - t0) / iters * 1e6
+        out[backend] = per_call * 2 * num_layers
+    return out
 
 
 def main():
@@ -24,6 +45,10 @@ def main():
     ap.add_argument("--epochs", type=int, default=200)
     ap.add_argument("--nparts", type=int, default=8)
     ap.add_argument("--nodes", type=int, default=4000)
+    ap.add_argument("--agg-backend", default="ell", choices=("coo", "ell"),
+                    help="aggregation realization: degree-bucketed "
+                         "blocked-ELL kernel dispatch (default) or the COO "
+                         "scatter-add parity fallback")
     args = ap.parse_args()
 
     g = sbm_graph(args.nodes, 10, avg_degree=14, homophily=0.8, seed=0)
@@ -40,11 +65,21 @@ def main():
           f"(hybrid saves {min(st.pre, st.post) / max(st.hybrid, 1):.2f}x)")
     wd = prepare_distributed(gn, x, pg)
 
+    agg_us = time_aggregation(wd, num_layers=3)
+    print(f"local aggregation / epoch: coo={agg_us['coo']:.0f}us "
+          f"ell={agg_us['ell']:.0f}us "
+          f"(bucketed-ELL speedup {agg_us['coo'] / agg_us['ell']:.2f}x; "
+          f"training with --agg-backend {args.agg_backend})")
+
+    ab = args.agg_backend
     runs = [
-        ("FP32 sync", DistConfig(nparts=args.nparts, bits=0, lr=0.01)),
-        ("Int2 + LP (SuperGCN)", DistConfig(nparts=args.nparts, bits=2, lr=0.01)),
+        ("FP32 sync", DistConfig(nparts=args.nparts, bits=0, lr=0.01,
+                                 agg_backend=ab)),
+        ("Int2 + LP (SuperGCN)", DistConfig(nparts=args.nparts, bits=2,
+                                            lr=0.01, agg_backend=ab)),
         ("FP32 cd-5 (DistGNN-like)", DistConfig(nparts=args.nparts, bits=0,
-                                                cd=5, lr=0.01)),
+                                                cd=5, lr=0.01,
+                                                agg_backend=ab)),
     ]
     for name, dc in runs:
         cfg = GCNConfig(model="sage", in_dim=64, hidden_dim=256,

@@ -55,6 +55,11 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+# Module import (not the symbol) so the exchange layer's "single custom
+# VJP" invariant stays greppable: the only custom_vjp *defined or bound*
+# here is quantized_exchange; the aggregation VJP lives with the kernel.
+from repro.kernels import seg_aggregate as segagg
+from repro.graph import structure as gstruct
 from repro.quant.stochastic import ROW_GROUP, QuantParams, dequantize, quantize
 
 WIRE_BITS = (0, 2, 4, 8)  # 0 = fp32
@@ -81,10 +86,43 @@ class DeviceHaloPlan(NamedTuple):
     recv_row: jax.Array          # [recv_nnz] int32
     recv_dst: jax.Array          # [recv_nnz] int32
     recv_weight: jax.Array       # [recv_nnz] f32
+    # Optional degree-bucketed layouts of the receive-side scatter (built
+    # when stack_halo_plan knows the owned-row count): forward maps the
+    # wire recv buffer into local rows through the same segment-aggregate
+    # primitive as the local graph; the transpose drives its custom VJP.
+    recv_ell: Optional["segagg.DeviceBucketedEll"] = None
+    recv_ell_t: Optional["segagg.DeviceBucketedEll"] = None
 
 
-def stack_halo_plan(hp) -> DeviceHaloPlan:
-    """graph.remote.HaloPlan (host numpy, [P, ...]) -> stacked device plan."""
+def _recv_bucketed(hp, num_rows: int):
+    """Bucketed-ELL (fwd + reverse) of each worker's recv scatter.
+
+    The host plan's padding entries carry weight 0 — they are dropped here
+    so they don't inflate row 0's degree class."""
+    P = hp.recv_row.shape[0]
+    wire_rows = hp.send_gather_idx.shape[-1]
+    fwd, rev = [], []
+    for p in range(P):
+        keep = hp.recv_weight[p] != 0
+        csr = gstruct.coo_to_csr(
+            hp.recv_row[p][keep], hp.recv_dst[p][keep],
+            hp.recv_weight[p][keep], num_rows, wire_rows)
+        fwd.append(gstruct.bucketed_ell_from_csr(csr))
+        rev.append(gstruct.bucketed_ell_from_csr(gstruct.transpose_csr(csr)))
+    return (segagg.device_bucketed(gstruct.stack_bucketed_ells(fwd)),
+            segagg.device_bucketed(gstruct.stack_bucketed_ells(rev)))
+
+
+def stack_halo_plan(hp, num_rows: Optional[int] = None) -> DeviceHaloPlan:
+    """graph.remote.HaloPlan (host numpy, [P, ...]) -> stacked device plan.
+
+    ``num_rows`` (each worker's padded owned-row count) additionally builds
+    the bucketed recv-scatter layouts consumed by the ``ell`` aggregation
+    backend; without it the plan only supports the COO scatter path.
+    """
+    recv_ell = recv_ell_t = None
+    if num_rows is not None:
+        recv_ell, recv_ell_t = _recv_bucketed(hp, num_rows)
     return DeviceHaloPlan(
         send_gather_idx=jnp.asarray(hp.send_gather_idx, jnp.int32),
         send_gather_mask=jnp.asarray(hp.send_gather_mask),
@@ -94,6 +132,8 @@ def stack_halo_plan(hp) -> DeviceHaloPlan:
         recv_row=jnp.asarray(hp.recv_row, jnp.int32),
         recv_dst=jnp.asarray(hp.recv_dst, jnp.int32),
         recv_weight=jnp.asarray(hp.recv_weight),
+        recv_ell=recv_ell,
+        recv_ell_t=recv_ell_t,
     )
 
 
@@ -104,11 +144,11 @@ class DeviceHierPlan(NamedTuple):
     inter: DeviceHaloPlan
 
 
-def stack_hier_plan(hp) -> DeviceHierPlan:
+def stack_hier_plan(hp, num_rows: Optional[int] = None) -> DeviceHierPlan:
     """graph.remote.HierHaloPlan (host numpy) -> stacked device plan."""
     return DeviceHierPlan(
-        intra=stack_halo_plan(hp.intra),
-        inter=stack_halo_plan(hp.inter),
+        intra=stack_halo_plan(hp.intra, num_rows=num_rows),
+        inter=stack_halo_plan(hp.inter, num_rows=num_rows),
     )
 
 
@@ -119,8 +159,18 @@ def assemble_send(h: jax.Array, plan: DeviceHaloPlan) -> jax.Array:
     return send
 
 
-def scatter_recv(acc: jax.Array, recv: jax.Array, plan: DeviceHaloPlan) -> jax.Array:
-    """Post-aggregate received rows into the local accumulator (Fig 2 step 6)."""
+def scatter_recv(acc: jax.Array, recv: jax.Array, plan: DeviceHaloPlan,
+                 agg_backend: str = "coo") -> jax.Array:
+    """Post-aggregate received rows into the local accumulator (Fig 2 step 6).
+
+    ``agg_backend="ell"`` (with a plan that carries the bucketed layouts)
+    routes the scatter through the same segment-aggregate primitive as the
+    local graph — dense per-degree-class gathers instead of an edge-order
+    scatter-add, forward and backward both.
+    """
+    if agg_backend == "ell" and plan.recv_ell is not None:
+        return acc + segagg.bucketed_aggregate(
+            recv, plan.recv_ell, plan.recv_ell_t, acc.shape[0])
     return acc.at[plan.recv_dst].add(plan.recv_weight[:, None] * recv[plan.recv_row])
 
 
@@ -397,7 +447,8 @@ class ExchangeSchedule:
     def run_layer(self, h: jax.Array, local_agg: jax.Array, wd,
                   key: Optional[jax.Array],
                   cache_entry: Optional[Sequence[jax.Array]] = None,
-                  epoch: Optional[jax.Array] = None
+                  epoch: Optional[jax.Array] = None,
+                  agg_backend: str = "coo"
                   ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
         """One GCN layer's full exchange: every stage in order, each with
         its own wire format and caching policy.
@@ -405,7 +456,8 @@ class ExchangeSchedule:
         ``cache_entry`` holds one stale recv buffer per *delayed* stage (in
         stage order); ``epoch`` drives the per-stage refresh. Returns the
         aggregated output and the new cache entry (empty for all-sync
-        schedules).
+        schedules). ``agg_backend`` selects the receive-side scatter
+        realization (see :func:`scatter_recv`).
 
         Note on delayed stages under jit: ``epoch`` is a traced value, so
         the lowered program contains (and executes) every stage's
@@ -432,7 +484,7 @@ class ExchangeSchedule:
                 recv = jnp.where(refresh, recv, stale)
                 new_entry.append(jax.lax.stop_gradient(recv))
                 ci += 1
-            acc = scatter_recv(acc, recv, plan)
+            acc = scatter_recv(acc, recv, plan, agg_backend=agg_backend)
         return acc, tuple(new_entry)
 
     # -- cache layout ------------------------------------------------------

@@ -101,3 +101,37 @@ def gat_aggregate(
     src_vals = whh[ell_idx]                            # [R, K, H, dh]
     out = jnp.einsum("rkh,rkhd->rhd", alpha, src_vals)
     return out.reshape(r, heads * dh) + p["b"]
+
+
+def gat_aggregate_bucketed(
+    p: Params,
+    h: jax.Array,      # [N, d_in]
+    ell,               # kernels.seg_aggregate.DeviceBucketedEll
+    num_rows: int,
+    heads: int,
+) -> jax.Array:
+    """GAT layer on the shared degree-bucketed ELL layout.
+
+    Every row's neighbour slots live in exactly one degree bucket, so the
+    per-row softmax is computed bucket-locally over K (not max-degree)
+    slots — the same bounded-padding win as the linear aggregation, and no
+    second max-degree layout to build. Slot validity is w > 0 (padding
+    weights are exactly 0; normalized edge weights are strictly positive).
+    """
+    n = h.shape[0]
+    wh = h @ p["w"]
+    dh = wh.shape[-1] // heads
+    whh = wh.reshape(n, heads, dh)
+    e_src = jnp.einsum("nhd,hd->nh", whh, p["a_src"])  # [N, H]
+    e_dst = jnp.einsum("nhd,hd->nh", whh, p["a_dst"])
+    out = jnp.zeros((num_rows, heads * dh), wh.dtype)
+    for b in ell.buckets:
+        valid = b.w > 0                                       # [Rb, K]
+        e = jax.nn.leaky_relu(
+            e_dst[b.rows][:, None, :] + e_src[b.idx], 0.2)    # [Rb, K, H]
+        e = jnp.where(valid[..., None], e, -1e9)
+        alpha = jax.nn.softmax(e, axis=1)
+        alpha = jnp.where(valid[..., None], alpha, 0.0)
+        agg = jnp.einsum("rkh,rkhd->rhd", alpha, whh[b.idx])  # [Rb, H, dh]
+        out = out.at[b.rows].add(agg.reshape(agg.shape[0], heads * dh))
+    return out + p["b"]

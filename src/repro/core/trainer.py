@@ -37,15 +37,23 @@ from repro.core.halo import (
     stack_halo_plan,
     stack_hier_plan,
 )
-from repro.core.layers import gat_aggregate
+from repro.core.layers import gat_aggregate, gat_aggregate_bucketed
 from repro.graph.remote import (
     HierPartitionedGraph,
     PartitionedGraph,
     build_halo_plan,
     build_hier_halo_plan,
 )
-from repro.graph.structure import Graph, ell_from_csr
+from repro.graph.structure import (
+    Graph,
+    bucketed_ell_from_csr,
+    ell_from_csr,
+    stack_bucketed_ells,
+    transpose_csr,
+)
 from repro.kernels import aggregate as kernel_aggregate
+from repro.kernels import bucketed_aggregate, device_bucketed
+from repro.kernels.seg_aggregate import DeviceBucketedEll
 from repro.kernels.ref import seg_aggregate_ref
 from repro.optim import adamw_init, adamw_update
 
@@ -63,15 +71,40 @@ class SingleGraphData(NamedTuple):
     ell_idx: jax.Array
     ell_w: jax.Array
     ell_valid: jax.Array
+    # The shared degree-bucketed layout (fwd + reverse-graph for the VJP):
+    # GCN/SAGE/GIN aggregation and GAT attention both consume it, so the
+    # layout is built once at preprocessing time.
+    ell: Optional[DeviceBucketedEll] = None
+    ell_t: Optional[DeviceBucketedEll] = None
 
 
 def prepare_single(g: Graph, x: np.ndarray, eval_mask: Optional[np.ndarray] = None,
-                   norm: str = "mean") -> SingleGraphData:
+                   norm: str = "mean",
+                   layouts: Tuple[str, ...] = ("dense", "bucketed")
+                   ) -> SingleGraphData:
+    """``layouts`` trims the prepared neighbour layouts: "dense" is the
+    max-degree ELL (seg_aggregate / use_kernel paths; its padding blows up
+    as rows x max_degree on power-law graphs), "bucketed" the shared
+    degree-bucketed layout (GAT path). The default builds both for
+    API compatibility; ``train_gcn_single`` picks per model."""
     gn = g.gcn_normalized() if norm == "gcn" else g.mean_normalized()
-    idx, w, valid = ell_from_csr(gn.csr_by_dst())
+    csr = gn.csr_by_dst()
     train = g.train_mask if g.train_mask is not None else np.ones(g.num_nodes, bool)
     if eval_mask is None:
         eval_mask = ~train
+    if "dense" in layouts:
+        idx, w, valid = ell_from_csr(csr)
+    else:
+        idx = np.zeros((g.num_nodes, 1), np.int32)
+        w = np.zeros((g.num_nodes, 1), np.float32)
+        valid = np.zeros((g.num_nodes, 1), bool)
+    ell = ell_t = None
+    if "bucketed" in layouts:
+        ell = device_bucketed(
+            stack_bucketed_ells([bucketed_ell_from_csr(csr)]), squeeze=True)
+        ell_t = device_bucketed(
+            stack_bucketed_ells([bucketed_ell_from_csr(transpose_csr(csr))]),
+            squeeze=True)
     return SingleGraphData(
         x=jnp.asarray(x),
         labels=jnp.asarray(g.labels, jnp.int32),
@@ -80,6 +113,8 @@ def prepare_single(g: Graph, x: np.ndarray, eval_mask: Optional[np.ndarray] = No
         ell_idx=jnp.asarray(idx, jnp.int32),
         ell_w=jnp.asarray(w),
         ell_valid=jnp.asarray(valid),
+        ell=ell,
+        ell_t=ell_t,
     )
 
 
@@ -88,6 +123,9 @@ def make_single_agg_fn(cfg: M.GCNConfig, data: SingleGraphData, params_getter,
     def agg_fn(l: int, h: jax.Array) -> jax.Array:
         if cfg.model == "gat":
             p = params_getter()["layers"][l]
+            if data.ell is not None:
+                return gat_aggregate_bucketed(p, h, data.ell, h.shape[0],
+                                              cfg.gat_heads)
             return gat_aggregate(p, h, data.ell_idx, data.ell_valid, cfg.gat_heads)
         if use_kernel:
             return kernel_aggregate(h, data.ell_idx, data.ell_w)
@@ -128,7 +166,8 @@ def single_eval(params, cfg: M.GCNConfig, data: SingleGraphData):
 
 def train_gcn_single(g: Graph, x: np.ndarray, cfg: M.GCNConfig, epochs: int,
                      lr: float = 0.01, seed: int = 0, log_every: int = 0):
-    data = prepare_single(g, x)
+    data = prepare_single(
+        g, x, layouts=("bucketed",) if cfg.model == "gat" else ("dense",))
     params = M.init_params(jax.random.PRNGKey(seed), cfg)
     opt_state = adamw_init(params)
     history = []
@@ -164,6 +203,12 @@ class WorkerData(NamedTuple):
     coo_w: jax.Array       # [nnz] (0 on padding)
     plan: Optional[DeviceHaloPlan] = None
     hier_plan: Optional[DeviceHierPlan] = None
+    # Degree-bucketed blocked-ELL layout of the local graph (fwd + the
+    # reverse-graph layout driving the kernel's custom VJP) — the "ell"
+    # aggregation backend's hot path; the COO triple above is its parity
+    # fallback.
+    ell: Optional[DeviceBucketedEll] = None
+    ell_t: Optional[DeviceBucketedEll] = None
 
 
 @dataclass(frozen=True)
@@ -173,6 +218,11 @@ class DistConfig:
     bits: int = 0            # wire format: 0=fp32, 2=Int2 (paper), 4, 8
     cd: int = 1              # delayed-comm period (DistGNN baseline; 1 = sync)
     lr: float = 0.01
+    # Aggregation realization: "ell" (default) dispatches the local graph
+    # and the exchange recv scatter through the degree-bucketed blocked-ELL
+    # segment-aggregate kernel (paper §4); "coo" keeps the naive edge-order
+    # scatter-add as a parity fallback.
+    agg_backend: str = "ell"
     # Two-level (hierarchical) exchange: nparts = num_groups * group_size
     # workers on nested axes (group_axis outer, node_axis inner). 0 = flat.
     num_groups: int = 0
@@ -190,6 +240,9 @@ class DistConfig:
     inter_cd: Optional[int] = None
 
     def __post_init__(self):
+        if self.agg_backend not in ("coo", "ell"):
+            raise ValueError(
+                f"agg_backend must be 'coo' or 'ell', got {self.agg_backend!r}")
         if self.num_groups or self.group_size:
             if self.num_groups < 1 or self.group_size < 1:
                 raise ValueError(
@@ -286,25 +339,44 @@ def prepare_distributed(
         cd_[p, :c.nnz] = dst
         cw[p, :c.nnz] = c.weights
 
+    # Degree-bucketed blocked-ELL layouts, fixed at partition time (fwd +
+    # reverse-graph for the custom VJP), padded to common shapes over P.
+    base = pg.base if isinstance(pg, HierPartitionedGraph) else pg
+    local_ell = base.local_ell or [bucketed_ell_from_csr(c)
+                                   for c in pg.local_csr]
+    local_ell_t = base.local_ell_t or [
+        bucketed_ell_from_csr(transpose_csr(c)) for c in pg.local_csr]
+
     common = dict(
         x=jnp.asarray(xs), labels=jnp.asarray(ls), train_mask=jnp.asarray(tm),
         eval_mask=jnp.asarray(em), owned_mask=jnp.asarray(om),
         coo_src=jnp.asarray(cs, jnp.int32), coo_dst=jnp.asarray(cd_, jnp.int32),
         coo_w=jnp.asarray(cw),
+        ell=device_bucketed(stack_bucketed_ells(local_ell)),
+        ell_t=device_bucketed(stack_bucketed_ells(local_ell_t)),
     )
     if isinstance(pg, HierPartitionedGraph):
         # build_hier_halo_plan already pads both levels to quant row groups.
         return WorkerData(**common, hier_plan=stack_hier_plan(
-            build_hier_halo_plan(pg)))
+            build_hier_halo_plan(pg), num_rows=M_))
     # Pad wire rows per pair to a multiple of the quant row group (4).
     R = pg.stats.padded_rows_per_pair
     R = max(4, (R + 3) // 4 * 4)
     hp = build_halo_plan(pg, rows_per_pair=R)
-    return WorkerData(**common, plan=stack_halo_plan(hp))
+    return WorkerData(**common, plan=stack_halo_plan(hp, num_rows=M_))
 
 
-def _local_aggregate(h: jax.Array, wd: WorkerData) -> jax.Array:
-    """Local (intra-partition) aggregation: COO scatter-add segment sum."""
+def _local_aggregate(h: jax.Array, wd: WorkerData,
+                     agg_backend: str = "coo") -> jax.Array:
+    """Local (intra-partition) aggregation.
+
+    ``"ell"`` runs the paper's operator: degree-bucketed blocked-ELL
+    dispatch through the segment-aggregate kernel, with the custom VJP
+    reusing the reverse-graph layout. ``"coo"`` is the PyG-baseline
+    edge-order scatter-add kept for parity checks.
+    """
+    if agg_backend == "ell" and wd.ell is not None:
+        return bucketed_aggregate(h, wd.ell, wd.ell_t)
     vals = wd.coo_w[:, None] * h[wd.coo_src]
     return jnp.zeros_like(h).at[wd.coo_dst].add(vals)
 
@@ -326,11 +398,12 @@ def _dist_forward(params, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
 
     def agg_fn_factory(dropout_key):
         def agg_fn(l: int, h: jax.Array) -> jax.Array:
-            local = _local_aggregate(h, wd)
+            local = _local_aggregate(h, wd, dc.agg_backend)
             kq = jax.random.fold_in(key, 7919 + l) if key is not None else None
             entry = halo_cache[l] if halo_cache is not None else None
             agg, ne = sched.run_layer(h, local, wd, kq,
-                                      cache_entry=entry, epoch=epoch)
+                                      cache_entry=entry, epoch=epoch,
+                                      agg_backend=dc.agg_backend)
             new_cache.append(ne)
             return agg
         return agg_fn
@@ -415,6 +488,11 @@ class DistributedTrainer:
             raise ValueError(
                 "WorkerData carries a hierarchical plan; set num_groups/"
                 "group_size on DistConfig (wd.plan is None)")
+        if dc.agg_backend == "ell" and wd.ell is None:
+            raise ValueError(
+                "agg_backend='ell' needs the bucketed layout in WorkerData "
+                "(wd.ell is None — build it via prepare_distributed, or "
+                "fall back to agg_backend='coo')")
         worker_step = make_dist_train_step(cfg, dc, use_cache=self.use_cache)
         worker_eval = make_dist_eval(cfg, dc)
         # (params, wd, key[, cache, epoch]): workers map their leading axis

@@ -1,4 +1,12 @@
-from repro.graph.structure import CSR, Graph, coo_to_csr
+from repro.graph.structure import (
+    CSR,
+    BucketedEll,
+    Graph,
+    bucketed_ell_from_csr,
+    coo_to_csr,
+    stack_bucketed_ells,
+    transpose_csr,
+)
 from repro.graph.generators import rmat_graph, sbm_graph, erdos_graph
 from repro.graph.partition import (
     cut_edges,
@@ -22,8 +30,12 @@ from repro.graph.remote import (
 
 __all__ = [
     "CSR",
+    "BucketedEll",
     "Graph",
+    "bucketed_ell_from_csr",
     "coo_to_csr",
+    "stack_bucketed_ells",
+    "transpose_csr",
     "rmat_graph",
     "sbm_graph",
     "erdos_graph",

@@ -21,7 +21,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.graph.structure import Graph, coo_to_csr
+from repro.graph.structure import Graph, bucketed_slot_count, coo_to_csr
 
 
 def _neighbor_csr(g: Graph):
@@ -215,6 +215,14 @@ def partition_stats(g: Graph, part: np.ndarray) -> dict:
     w = default_node_weights(g)
     loads = np.array([w[part == p].sum() for p in range(nparts)])
     sizes = np.bincount(part, minlength=nparts)
+    # Per-worker cost of the degree-bucketed blocked-ELL aggregation layout
+    # (built on each partition's local graph): padded slots vs local nnz.
+    local = ~cut
+    deg = np.zeros(g.num_nodes, dtype=np.int64)
+    np.add.at(deg, g.dst[local], 1)
+    agg_slots = sum(bucketed_slot_count(deg[part == p])
+                    for p in range(nparts))
+    local_nnz = int(local.sum())
     return {
         "nparts": nparts,
         "cut_edges": int(cut.sum()),
@@ -222,4 +230,6 @@ def partition_stats(g: Graph, part: np.ndarray) -> dict:
         "load_imbalance": float(loads.max() / max(loads.mean(), 1e-9)),
         "size_imbalance": float(sizes.max() / max(sizes.mean(), 1e-9)),
         "sizes": sizes.tolist(),
+        "agg_padded_slots": int(agg_slots),
+        "agg_padding_ratio": round(agg_slots / max(local_nnz, 1), 4),
     }

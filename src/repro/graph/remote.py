@@ -33,7 +33,14 @@ import numpy as np
 from repro.graph.mvc import min_vertex_cover_bipartite, verify_cover
 from repro.quant.stochastic import wire_bytes as quant_wire_bytes
 from repro.graph.partition import partition_graph, partition_hierarchical
-from repro.graph.structure import CSR, Graph, coo_to_csr
+from repro.graph.structure import (
+    CSR,
+    BucketedEll,
+    Graph,
+    bucketed_ell_from_csr,
+    coo_to_csr,
+    transpose_csr,
+)
 
 
 @dataclass
@@ -170,6 +177,11 @@ class PartitionedGraph:
     stats: CommStats
     num_nodes: int
     max_owned: int                   # max nodes per part (local padding)
+    # Degree-bucketed blocked-ELL layouts of each local graph, fixed at
+    # partition time (MG-GCN-style): forward, and the reverse-graph layout
+    # that drives the aggregation kernel's custom VJP.
+    local_ell: List[BucketedEll] = field(default_factory=list)
+    local_ell_t: List[BucketedEll] = field(default_factory=list)
 
     def halo_in_volume(self, p: int) -> int:
         return sum(pl.volume for (q, pp), pl in self.pair_plans.items() if pp == p)
@@ -343,6 +355,9 @@ def build_partitioned_graph(
         stats=stats,
         num_nodes=g.num_nodes,
         max_owned=max_owned,
+        local_ell=[bucketed_ell_from_csr(c) for c in local_csr],
+        local_ell_t=[bucketed_ell_from_csr(transpose_csr(c))
+                     for c in local_csr],
     )
 
 

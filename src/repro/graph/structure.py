@@ -11,7 +11,7 @@ aggregation of ``dst`` (i.e. ``src in N(dst)``).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -146,16 +146,48 @@ class Graph:
         return coo_to_csr(self.src, self.dst, self.edge_weight, self.num_nodes, self.num_nodes)
 
 
-def ell_from_csr(csr: CSR, max_nnz: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+def transpose_csr(csr: CSR) -> CSR:
+    """The reverse-graph CSR: out_t[c] = sum over entries (r, c, w) of w*g[r].
+
+    Aggregating with the transposed layout *is* the VJP of aggregating with
+    the original one — the bucketed-ELL backward pass is built on this.
+    """
+    rows = np.repeat(np.arange(csr.num_rows, dtype=np.int32),
+                     np.diff(csr.indptr))
+    return coo_to_csr(rows, csr.indices, csr.weights,
+                      num_rows=csr.num_cols, num_cols=csr.num_rows)
+
+
+def ell_from_csr(
+    csr: CSR,
+    max_nnz: Optional[int] = None,
+    on_overflow: str = "error",
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Convert CSR to padded ELL (indices, weights, mask).
 
     The TPU aggregation kernel consumes fixed-shape neighbour slots; padding
     slots point at row 0 with weight 0 so gathers stay in-bounds.
     Returns (idx [R, K], w [R, K], valid [R, K]).
+
+    When ``max_nnz`` is smaller than the max row degree the layout cannot
+    hold every edge: ``on_overflow="error"`` (default) raises — use
+    :func:`bucketed_ell_from_csr`, which never drops edges, for graphs whose
+    max degree makes a single-K layout impractical; ``"truncate"`` keeps
+    only the first ``max_nnz`` slots per row (explicit opt-in to the lossy
+    behaviour that used to happen silently).
     """
     deg = csr.row_degrees()
-    k = int(deg.max()) if max_nnz is None else int(max_nnz)
+    k = int(deg.max()) if max_nnz is None and csr.nnz else int(max_nnz or 0)
     k = max(k, 1)
+    if csr.nnz and int(deg.max()) > k:
+        if on_overflow == "error":
+            raise ValueError(
+                f"ell_from_csr: max_nnz={k} < max row degree "
+                f"{int(deg.max())} would drop edges; pass "
+                f"on_overflow='truncate' to keep the first {k} slots per "
+                "row, or use bucketed_ell_from_csr (lossless)")
+        if on_overflow != "truncate":
+            raise ValueError(f"unknown on_overflow {on_overflow!r}")
     rows = csr.num_rows
     idx = np.zeros((rows, k), dtype=np.int32)
     w = np.zeros((rows, k), dtype=np.float32)
@@ -169,3 +201,140 @@ def ell_from_csr(csr: CSR, max_nnz: Optional[int] = None) -> Tuple[np.ndarray, n
         w[r, s] = csr.weights[keep]
         valid[r, s] = True
     return idx, w, valid
+
+
+# --------------------------------------------------------------------------
+# Degree-bucketed blocked-ELL (the aggregation kernel's production layout)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class EllBucket:
+    """One degree class: every member row has degree in (k/growth, k].
+
+    ``rows[i]`` is the destination row the i-th bucket row scatters into;
+    ``idx``/``w`` are its neighbour slots (0-padded past the degree).
+    """
+
+    k: int
+    rows: np.ndarray  # [Rb] int64
+    idx: np.ndarray   # [Rb, k] int32
+    w: np.ndarray     # [Rb, k] float32
+
+
+@dataclass
+class BucketedEll:
+    """Degree-bucketed blocked-ELL layout of one (possibly rectangular)
+    aggregation operator: out[rows] += sum_k w * x[idx], per bucket.
+
+    Rows are split by degree class so padding waste is bounded by the
+    bucket growth factor instead of the max degree (see
+    ``bucketed_ell_from_csr``). Zero-degree rows appear in no bucket.
+    """
+
+    num_rows: int
+    num_cols: int
+    nnz: int
+    buckets: List[EllBucket] = field(default_factory=list)
+
+    @property
+    def ks(self) -> List[int]:
+        return [b.k for b in self.buckets]
+
+    @property
+    def padded_slots(self) -> int:
+        return sum(b.rows.shape[0] * b.k for b in self.buckets)
+
+    @property
+    def padding_ratio(self) -> float:
+        """Padded slots per edge; the growth-2 ladder guarantees < 2."""
+        return self.padded_slots / max(self.nnz, 1)
+
+
+def degree_bucket_ladder(max_degree: int, min_k: int = 1,
+                         growth: int = 2) -> List[int]:
+    """Slot counts {min_k, min_k*growth, ...} covering ``max_degree``."""
+    ks = []
+    k = max(int(min_k), 1)
+    while True:
+        ks.append(k)
+        if k >= max_degree:
+            return ks
+        k = max(k * growth, k + 1)
+
+
+def bucketed_slot_count(degrees: np.ndarray, min_k: int = 1,
+                        growth: int = 2) -> int:
+    """Padded slots a degree multiset occupies under the bucket ladder —
+    the layout cost ``partition_stats`` accounts per partition without
+    materializing the layout."""
+    deg = np.asarray(degrees)
+    deg = deg[deg > 0]
+    if not len(deg):
+        return 0
+    ks = np.asarray(degree_bucket_ladder(int(deg.max()), min_k, growth))
+    return int(ks[np.searchsorted(ks, deg)].sum())
+
+
+def bucketed_ell_from_csr(csr: CSR, min_k: int = 1,
+                          growth: int = 2) -> BucketedEll:
+    """Split CSR rows into degree buckets and pad each to its bucket's K.
+
+    A row of degree d lands in the bucket with K = the smallest ladder slot
+    count >= d, so (with the default growth-2 ladder) it wastes < d slots:
+    total padded slots < 2 * nnz on ANY graph — versus max-degree padding's
+    ``num_rows * max_degree`` blow-up on power-law graphs. Lossless: every
+    edge keeps exactly one slot (cf. ``ell_from_csr``'s overflow error).
+    """
+    out = BucketedEll(csr.num_rows, csr.num_cols, csr.nnz)
+    if not csr.nnz:
+        return out
+    deg = csr.row_degrees()
+    lo = 0
+    for k in degree_bucket_ladder(int(deg.max()), min_k, growth):
+        sel = np.where((deg > lo) & (deg <= k))[0]
+        lo = k
+        if not len(sel):
+            continue
+        d = deg[sel]
+        offs = np.arange(int(d.sum())) - np.repeat(np.cumsum(d) - d, d)
+        pos = np.repeat(csr.indptr[sel], d) + offs
+        rr = np.repeat(np.arange(len(sel)), d)
+        idx = np.zeros((len(sel), k), dtype=np.int32)
+        w = np.zeros((len(sel), k), dtype=np.float32)
+        idx[rr, offs] = csr.indices[pos]
+        w[rr, offs] = csr.weights[pos]
+        out.buckets.append(EllBucket(k, sel.astype(np.int64), idx, w))
+    return out
+
+
+def stack_bucketed_ells(
+    ells: Sequence[BucketedEll],
+    row_align: int = 8,
+) -> List[Tuple[int, np.ndarray, np.ndarray, np.ndarray]]:
+    """Pad per-worker bucketed layouts to common shapes for vmap/shard_map.
+
+    Buckets are merged on the union ladder across workers; each bucket's
+    row count is padded to the max across workers (rounded up to
+    ``row_align`` for the kernel's sublane tiling). Padding rows scatter a
+    zero contribution into row 0. Returns [(k, rows [P, Rk], idx
+    [P, Rk, k], w [P, Rk, k])], one entry per bucket.
+    """
+    ks = sorted({b.k for e in ells for b in e.buckets})
+    out = []
+    for k in ks:
+        per = [next((b for b in e.buckets if b.k == k), None) for e in ells]
+        rmax = max(b.rows.shape[0] if b is not None else 0 for b in per)
+        rmax = max(row_align, -(-rmax // row_align) * row_align)
+        rows = np.zeros((len(ells), rmax), dtype=np.int64)
+        idx = np.zeros((len(ells), rmax, k), dtype=np.int64)
+        w = np.zeros((len(ells), rmax, k), dtype=np.float32)
+        for p, b in enumerate(per):
+            if b is None:
+                continue
+            n = b.rows.shape[0]
+            rows[p, :n] = b.rows
+            idx[p, :n] = b.idx
+            w[p, :n] = b.w
+        out.append((k, rows, idx, w))
+    return out

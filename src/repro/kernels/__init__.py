@@ -1,6 +1,21 @@
 # The paper's compute hot-spots, as TPU Pallas kernels (DESIGN.md §3):
 #   seg_aggregate — blocked-ELL neighbour aggregation (paper §4 index_add/SpMM)
+#                   + its degree-bucketed production layout and fused VJP
 #   quant_pack    — fused minmax + stochastic int2/4/8 quantize + pack (§7.3)
-from repro.kernels.ops import aggregate, dequantize_unpack, quantize_pack
+from repro.kernels.ops import (
+    DeviceBucketedEll,
+    aggregate,
+    bucketed_aggregate,
+    dequantize_unpack,
+    device_bucketed,
+    quantize_pack,
+)
 
-__all__ = ["aggregate", "quantize_pack", "dequantize_unpack"]
+__all__ = [
+    "DeviceBucketedEll",
+    "aggregate",
+    "bucketed_aggregate",
+    "device_bucketed",
+    "quantize_pack",
+    "dequantize_unpack",
+]

@@ -12,7 +12,12 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.quant_pack import dequant_unpack, quant_pack
-from repro.kernels.seg_aggregate import seg_aggregate
+from repro.kernels.seg_aggregate import (  # noqa: F401  (re-exported API)
+    DeviceBucketedEll,
+    bucketed_aggregate,
+    device_bucketed,
+    seg_aggregate,
+)
 
 
 def _on_tpu() -> bool:

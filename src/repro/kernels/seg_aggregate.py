@@ -21,15 +21,43 @@ step). This is deliberate: the operator runs on *partition-local* graphs —
 the paper's own hierarchical partitioning bounds ``N`` per worker, so the
 local feature slab fits VMEM at production scale (e.g. 8k rows x 128 lanes
 x 4 B = 4 MB < 16 MB). Validated with interpret=True on CPU.
+
+Degree-bucketed layout (the production hot path)
+------------------------------------------------
+
+A single-K ELL pads every row to the *max* degree, which on power-law
+graphs inflates memory and FLOPs by orders of magnitude (the reason the
+kernel used to sit outside the training loop). The production layout
+(``graph.structure.bucketed_ell_from_csr``) instead splits rows into
+degree classes on a growth-2 ladder K in {1, 2, 4, 8, ...}: a row of
+degree d pads to the smallest K >= d, wasting < d slots, so **total
+padded slots < 2 x nnz on any graph** (plus a per-bucket row-alignment
+sliver for the kernel's 8-row sublane tile). :func:`bucketed_aggregate`
+runs one ``seg_aggregate`` per bucket — each a dense, perfectly regular
+gather/accumulate — and scatters the R (not nnz) bucket outputs into the
+destination rows.
+
+Backward pass: aggregation is linear, ``out = A @ x``, so the VJP is
+``A^T @ g`` — *another* aggregation, over the reversed graph. The custom
+VJP therefore takes a second bucketed layout built from the transposed
+CSR (``graph.structure.transpose_csr``) at partition time and runs the
+same bucketed kernel over it, instead of letting XLA transpose the
+forward gather into the scatter-add access pattern the paper's operator
+exists to avoid. The cotangent of the layout arrays is structurally zero
+(edge weights are preprocessing constants).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels import ref
 
 
 DEFAULT_BLOCK_ROWS = 8
@@ -98,3 +126,115 @@ def seg_aggregate(
         out_shape=jax.ShapeDtypeStruct((r, f), x.dtype),
         interpret=interpret,
     )(ell_idx, ell_w, x)
+
+
+# --------------------------------------------------------------------------
+# Degree-bucketed blocked-ELL aggregation with a fused custom VJP
+# --------------------------------------------------------------------------
+
+
+class DeviceEllBucket(NamedTuple):
+    """One degree bucket on device (leading worker axis in stacked form)."""
+
+    rows: jax.Array  # [.., Rb] int32 destination rows (0 on padding)
+    idx: jax.Array   # [.., Rb, K] int32 source rows (0 on padding)
+    w: jax.Array     # [.., Rb, K] f32 edge weights (0 on padding)
+
+
+class DeviceBucketedEll(NamedTuple):
+    """Device form of ``graph.structure.BucketedEll`` (a pytree, so it
+    stacks/maps over the worker axis like any other WorkerData leaf)."""
+
+    buckets: Tuple[DeviceEllBucket, ...]
+
+
+def device_bucketed(stacked, squeeze: bool = False) -> DeviceBucketedEll:
+    """Lift ``graph.structure.stack_bucketed_ells`` output to device arrays.
+
+    ``squeeze=True`` drops the leading worker axis (single-graph use).
+    """
+    sl = (lambda a: a[0]) if squeeze else (lambda a: a)
+    return DeviceBucketedEll(tuple(
+        DeviceEllBucket(
+            rows=jnp.asarray(sl(rows), jnp.int32),
+            idx=jnp.asarray(sl(idx), jnp.int32),
+            w=jnp.asarray(sl(w)),
+        )
+        for _, rows, idx, w in stacked
+    ))
+
+
+def _use_kernel(policy) -> bool:
+    """Resolve the kernel policy: True/False force, "auto" = TPU only (the
+    interpret-mode kernel is correct but far too slow for a CPU hot path)."""
+    if policy == "auto":
+        return jax.default_backend() == "tpu"
+    return bool(policy)
+
+
+def _bucket_matvec(x: jax.Array, b: DeviceEllBucket, kernel: bool) -> jax.Array:
+    r, k = b.idx.shape
+    aligned = (x.shape[-1] % DEFAULT_BLOCK_FEAT == 0
+               and r % DEFAULT_BLOCK_ROWS == 0)
+    if kernel and aligned:
+        return seg_aggregate(x, b.idx, b.w,
+                             interpret=jax.default_backend() != "tpu")
+    return ref.seg_aggregate_ref(x, b.idx, b.w)
+
+
+def _bucketed_forward(x: jax.Array, ell: DeviceBucketedEll, out_rows: int,
+                      kernel: bool) -> jax.Array:
+    """out[rows_b] += seg_aggregate(x, idx_b, w_b) for every degree bucket.
+
+    Padding bucket rows carry all-zero weights and scatter a zero into row
+    0, so the R-row (not nnz-row) scatter is the only irregular access.
+    """
+    out = jnp.zeros((out_rows, x.shape[-1]), x.dtype)
+    for b in ell.buckets:
+        out = out.at[b.rows].add(_bucket_matvec(x, b, kernel))
+    return out
+
+
+def _zero_cotangents(tree):
+    """Symbolic-zero cotangents for a layout pytree (float0 for ints)."""
+    return jax.tree_util.tree_map(
+        lambda a: np.zeros(np.shape(a), jax.dtypes.float0)
+        if jnp.issubdtype(jnp.result_type(a), jnp.integer)
+        else jnp.zeros_like(a),
+        tree)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _bucketed_aggregate(x, ell, ell_t, out_rows, in_rows, kernel):
+    return _bucketed_forward(x, ell, out_rows, kernel)
+
+
+def _bucketed_aggregate_fwd(x, ell, ell_t, out_rows, in_rows, kernel):
+    # Linear in x: the layouts are the only residuals.
+    return _bucketed_aggregate(x, ell, ell_t, out_rows, in_rows, kernel), (
+        ell, ell_t)
+
+
+def _bucketed_aggregate_bwd(out_rows, in_rows, kernel, res, g):
+    ell, ell_t = res
+    # The transpose aggregation IS an aggregation — same bucketed access
+    # pattern, reverse-graph layout.
+    dx = _bucketed_forward(g, ell_t, in_rows, kernel)
+    return dx, _zero_cotangents(ell), _zero_cotangents(ell_t)
+
+
+_bucketed_aggregate.defvjp(_bucketed_aggregate_fwd, _bucketed_aggregate_bwd)
+
+
+def bucketed_aggregate(
+    x: jax.Array,               # [N, F] source features
+    ell: DeviceBucketedEll,     # forward layout (rows scatter into out)
+    ell_t: DeviceBucketedEll,   # reverse-graph layout (drives the VJP)
+    out_rows: Optional[int] = None,  # output rows (default: square, N)
+    *,
+    use_kernel="auto",          # True | False | "auto" (kernel iff on TPU)
+) -> jax.Array:
+    """Degree-bucketed blocked-ELL aggregation with a fused custom VJP."""
+    rows = int(x.shape[0] if out_rows is None else out_rows)
+    return _bucketed_aggregate(x, ell, ell_t, rows, int(x.shape[0]),
+                               _use_kernel(use_kernel))

@@ -249,7 +249,8 @@ def _finish(rec: dict, t0: float, save: bool) -> dict:
 
 
 def run_gcn_dryrun(multi_pod: bool, save: bool = True, groups: int = 0,
-                   bits: int = 2, cd: int = 1) -> dict:
+                   bits: int = 2, cd: int = 1,
+                   agg_backend: str = "ell") -> dict:
     """Dry-run the paper's distributed GCN trainer on the production mesh,
     dispatched through its ExchangeSchedule.
 
@@ -287,18 +288,21 @@ def run_gcn_dryrun(multi_pod: bool, save: bool = True, groups: int = 0,
             group_size = nparts // groups
             gmesh = make_hier_worker_mesh(groups, group_size)
             dc = DistConfig(nparts=nparts, bits=bits, cd=cd,
-                            num_groups=groups, group_size=group_size)
+                            num_groups=groups, group_size=group_size,
+                            agg_backend=agg_backend)
             pg = build_hierarchical_partitioned_graph(
                 g, groups, group_size, strategy="hybrid", seed=0)
         else:
             gmesh = make_worker_mesh(nparts)
-            dc = DistConfig(nparts=nparts, bits=bits, cd=cd)
+            dc = DistConfig(nparts=nparts, bits=bits, cd=cd,
+                            agg_backend=agg_backend)
             pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
         wd = prepare_distributed(g, x, pg)
         cfg = GCNConfig(model="sage", in_dim=feat, hidden_dim=256,
                         num_classes=40, num_layers=3, quant_bits=bits)
         trainer = DistributedTrainer(cfg, dc, wd, mode="shard_map",
                                      mesh=gmesh, seed=0)
+        rec["agg_backend"] = dc.agg_backend
         rec["schedule"] = trainer.schedule.describe()
         rec["predicted_wire_bytes"] = trainer.schedule.wire_volume_bytes(
             pg.stats, feat)
@@ -333,12 +337,15 @@ def main():
                     help="with --gcn: wire format for the exchange schedule")
     ap.add_argument("--cd", type=int, default=1,
                     help="with --gcn: delayed-comm refresh period")
+    ap.add_argument("--agg-backend", default="ell", choices=("coo", "ell"),
+                    help="with --gcn: aggregation realization (bucketed "
+                         "blocked-ELL kernel dispatch vs COO scatter-add)")
     ap.add_argument("--hlo-out", action="store_true")
     args = ap.parse_args()
 
     if args.gcn:
         run_gcn_dryrun(args.multi_pod, groups=args.groups, bits=args.bits,
-                       cd=args.cd)
+                       cd=args.cd, agg_backend=args.agg_backend)
         return
     if args.all:
         results = []

@@ -46,12 +46,13 @@ def run_gcn(args):
             gn, groups, group_size, strategy=args.strategy, seed=args.seed)
         dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd,
                         lr=args.lr, num_groups=groups, group_size=group_size,
-                        inter_bits=args.inter_bits, inter_cd=args.inter_cd)
+                        inter_bits=args.inter_bits, inter_cd=args.inter_cd,
+                        agg_backend=args.agg_backend)
     else:
         pg = build_partitioned_graph(gn, args.nparts, strategy=args.strategy,
                                      seed=args.seed)
         dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd,
-                        lr=args.lr)
+                        lr=args.lr, agg_backend=args.agg_backend)
     s = pg.stats
     print(f"partition comm volumes: vanilla={s.vanilla} pre={s.pre} "
           f"post={s.post} hybrid={s.hybrid} (selected={s.selected})")
@@ -127,6 +128,10 @@ def main():
     ap.add_argument("--no-lp", dest="lp", action="store_false")
     ap.add_argument("--cd", type=int, default=1,
                     help="delayed-comm period (DistGNN baseline; 1=sync)")
+    ap.add_argument("--agg-backend", default="ell", choices=["coo", "ell"],
+                    help="aggregation realization: degree-bucketed "
+                         "blocked-ELL kernel dispatch (default) or the "
+                         "COO scatter-add parity fallback")
     ap.add_argument("--groups", type=int, default=0,
                     help="num_groups for the hierarchical two-level "
                          "exchange (0 = flat; group_size = nparts/groups)")
