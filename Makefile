@@ -1,7 +1,7 @@
 # Tier-1 verification (same command as ROADMAP.md).
 PY ?= python
 
-.PHONY: check check-fast bench-comm bench-comm-sweep bench-agg
+.PHONY: check check-fast check-overlap bench-comm bench-comm-sweep bench-agg
 
 check:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -9,6 +9,13 @@ check:
 # Skip the slow subprocess dry-run compile (~2 min) for quick iteration.
 check-fast:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q -m "not slow"
+
+# CI-sized hierarchical dry-run asserting the two-phase overlap: the
+# lowered HLO must issue the inter-stage wire collectives before the
+# bucketed-aggregation dots (exits non-zero otherwise).
+check-overlap:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.dryrun \
+		--gcn --groups 2 --scale 10 --chips 8 --overlap --assert-overlap
 
 bench-comm:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/comm_volume.py

@@ -5,6 +5,14 @@ are in place, so the most aggressive width wins).
 
 Reports, per bit width: wire bytes per layer (hybrid plan), modelled comm
 time, and final eval accuracy on the SBM task.
+
+Per-stage rows (``bits_ablation_stage/``) ablate the bit width per
+*exchange stage* of the hierarchical schedule — Int2 on the slow
+inter-group wire with fp32 intra vs Int2 everywhere vs fp32 everywhere —
+the convergence evidence required before flipping the quantized-inter
+default (ROADMAP item 2): if the mixed schedule matches fp32 accuracy
+while carrying Int2-sized inter bytes, quantizing only the slow wire is
+free.
 """
 
 from __future__ import annotations
@@ -15,7 +23,8 @@ import numpy as np
 
 from repro.core import DistConfig, DistributedTrainer, GCNConfig, prepare_distributed
 from repro.core.perf_model import FUGAKU_A64FX, comm_time
-from repro.graph import build_partitioned_graph, sbm_graph
+from repro.graph import (build_hierarchical_partitioned_graph,
+                         build_partitioned_graph, sbm_graph)
 from repro.graph.generators import sbm_features
 from repro.quant import wire_bytes
 
@@ -50,6 +59,52 @@ def run(epochs: int = 25, nparts: int = 4, feat_dim: int = 32) -> list:
             "name": f"bits_ablation/{'fp32' if bits == 0 else f'int{bits}'}",
             "us_per_call": round(t_comm * 1e6, 2),
             "derived": (f"eval_acc={acc:.4f},wire_bytes_per_layer={wire},"
+                        f"epoch_s={dt:.3f}"),
+        })
+    rows.extend(run_per_stage(epochs=epochs, feat_dim=feat_dim, x=x, gn=gn))
+    return rows
+
+
+def run_per_stage(epochs: int = 25, num_groups: int = 2, group_size: int = 2,
+                  feat_dim: int = 32, x=None, gn=None) -> list:
+    """Per-stage bit-width rows on the hierarchical schedule.
+
+    Each row trains the same SBM task through a different (intra_bits,
+    inter_bits) schedule and reports final accuracy next to the per-stage
+    predicted wire bytes, so the accuracy cost of quantizing each wire is
+    attributable to that wire.
+    """
+    if gn is None:
+        g = sbm_graph(1200, 8, avg_degree=10, homophily=0.78, seed=21)
+        x, _ = sbm_features(g, feat_dim, noise=2.8, seed=22)
+        gn = g.mean_normalized()
+    nparts = num_groups * group_size
+    hpg = build_hierarchical_partitioned_graph(
+        gn, num_groups, group_size, strategy="hybrid", seed=0)
+    wd = prepare_distributed(gn, x, hpg)
+    rows = []
+    for name, intra_bits, inter_bits in (
+            ("fp32_everywhere", 0, 0),
+            ("int2_inter_fp32_intra", 0, 2),
+            ("int2_everywhere", 2, 2)):
+        cfg = GCNConfig(model="sage", in_dim=feat_dim, hidden_dim=64,
+                        num_classes=8, num_layers=3, dropout=0.2,
+                        label_prop=True, norm="layer")
+        dc = DistConfig(nparts=nparts, num_groups=num_groups,
+                        group_size=group_size, intra_bits=intra_bits,
+                        inter_bits=inter_bits, lr=0.01)
+        tr = DistributedTrainer(cfg, dc, wd, mode="vmap", seed=0)
+        t0 = time.perf_counter()
+        tr.fit(epochs)
+        dt = (time.perf_counter() - t0) / epochs
+        acc = tr.evaluate()
+        stage_bytes = dc.schedule().wire_volume_bytes(hpg.stats, feat_dim)
+        rows.append({
+            "name": f"bits_ablation_stage/{name}",
+            "us_per_call": 0.0,
+            "derived": (f"eval_acc={acc:.4f},"
+                        f"intra_wire_b={stage_bytes['intra']:.0f},"
+                        f"inter_wire_b={stage_bytes['inter']:.0f},"
                         f"epoch_s={dt:.3f}"),
         })
     return rows

@@ -26,7 +26,7 @@ import sys
 import numpy as np
 
 from repro.core import DistConfig
-from repro.core.perf_model import FUGAKU_A64FX, comm_time
+from repro.core.perf_model import FUGAKU_A64FX, comm_time, hier_epoch_time
 from repro.graph import (
     build_hierarchical_partitioned_graph,
     build_partitioned_graph,
@@ -209,11 +209,21 @@ def run_schedule_check(g=None, nparts: int = 16, feat_dim: int = 256,
     return rows
 
 
-def sweep(scale: int = 12, feat_dim: int = 256,
-          grid=((2, 2), (2, 4), (4, 2), (4, 4), (8, 4))) -> list:
-    """Small G x W grid of the two-level split (ROADMAP strong-scaling
-    seed): per-combo stage rows + predicted wire bytes for the default
-    Int2-inter schedule."""
+# Quick PR-check grid (archived as a CI artifact at --scale 11).
+GRID_CI = ((2, 2), (2, 4), (4, 2), (4, 4), (8, 4))
+# Strong-scaling grid past 1k workers (paper Figs 9/10 regime; run at
+# --scale >= 13 so the per-worker subgraphs stay non-degenerate).
+GRID_STRONG = ((8, 8), (16, 8), (16, 16), (32, 16), (64, 16), (128, 16))
+
+
+def sweep(scale: int = 12, feat_dim: int = 256, grid=GRID_CI) -> list:
+    """G x W grid of the two-level split (ROADMAP strong-scaling curve):
+    per-combo stage rows, predicted wire bytes for the default Int2-inter
+    schedule, and the modelled epoch time with/without the two-phase
+    wire/compute overlap — the with-overlap column is the paper's
+    strong-scaling curve shape (epoch time keeps falling while the
+    inter wire stays hidden behind local aggregation, then flattens where
+    the exposed remainder takes over)."""
     g = rmat_graph(scale, edge_factor=8, seed=1)
     out = []
     for num_groups, group_size in grid:
@@ -223,6 +233,13 @@ def sweep(scale: int = 12, feat_dim: int = 256,
         s = hpg.stats
         dc = DistConfig(nparts=nparts, bits=0, inter_bits=2,
                         num_groups=num_groups, group_size=group_size)
+        stage_bytes = dc.schedule().wire_volume_bytes(s, feat_dim)
+        model = hier_epoch_time(
+            stage_bytes["intra"], stage_bytes["inter"],
+            local_nnz=[c.nnz for c in hpg.local_csr],
+            owned_rows=[len(o) for o in hpg.owned],
+            feat_dim=feat_dim, hidden_dim=256, num_layers=3,
+            hw=FUGAKU_A64FX)
         out.append({
             "scale": scale,
             "num_groups": num_groups,
@@ -232,8 +249,12 @@ def sweep(scale: int = 12, feat_dim: int = 256,
             "inter_rows": s.inter_rows,
             "flat_inter_rows": s.flat_inter_rows,
             "inter_savings": round(s.inter_savings(), 4),
-            "predicted_wire_bytes":
-                dc.schedule().wire_volume_bytes(s, feat_dim),
+            "predicted_wire_bytes": stage_bytes,
+            "modelled_epoch_s": {
+                "sequential": model["sequential"],
+                "overlap": model["overlap"],
+                "inter_hidden_fraction": model["inter_hidden_fraction"],
+            },
         })
     return out
 
@@ -251,18 +272,27 @@ def main() -> None:
     ap.add_argument("--feat-dim", type=int, default=256)
     ap.add_argument("--sweep", action="store_true",
                     help="run the G x W grid and emit JSON instead of CSV")
+    ap.add_argument("--grid", choices=("ci", "strong"), default="ci",
+                    help="with --sweep: 'ci' = quick small grid (<= 32 "
+                         "workers); 'strong' = strong-scaling grid from 64 "
+                         "to 2048 workers (use --scale >= 13)")
     ap.add_argument("--out", type=str, default=None,
                     help="with --sweep: write the JSON here instead of stdout")
     args = ap.parse_args()
     if args.sweep and (args.nparts is not None or args.groups):
         ap.error("--sweep runs a fixed G x W grid; --nparts/--groups "
                  "only apply to the single-topology run")
+    if args.sweep and args.grid == "strong" and args.scale < 13:
+        ap.error(f"--grid strong partitions up to 2048 workers; --scale "
+                 f"{args.scale} leaves them degenerate subgraphs "
+                 "(use --scale >= 13)")
     nparts = args.nparts if args.nparts is not None else 16
     if args.groups and nparts % args.groups:
         ap.error(f"--groups {args.groups} must divide --nparts {nparts}")
 
     if args.sweep:
-        result = sweep(scale=args.scale, feat_dim=args.feat_dim)
+        result = sweep(scale=args.scale, feat_dim=args.feat_dim,
+                       grid=GRID_CI if args.grid == "ci" else GRID_STRONG)
         payload = json.dumps(result, indent=1)
         if args.out:
             with open(args.out, "w") as f:

@@ -1,6 +1,11 @@
 # SuperGCN core: the paper's primary contribution in JAX.
 from repro.core.model import GCNConfig, forward, init_params, loss_and_metrics, lp_masks
-from repro.core.exchange import ExchangeSchedule, StageSpec
+from repro.core.exchange import (
+    ExchangeSchedule,
+    LayerInFlight,
+    LayerProgram,
+    StageSpec,
+)
 from repro.core.trainer import (
     DistConfig,
     DistributedTrainer,
@@ -20,6 +25,8 @@ from repro.core.halo import (
 
 __all__ = [
     "ExchangeSchedule",
+    "LayerInFlight",
+    "LayerProgram",
     "StageSpec",
     "DeviceHierPlan",
     "aggregate_with_halo_hierarchical",

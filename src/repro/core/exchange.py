@@ -1,4 +1,4 @@
-"""Composable halo-exchange schedules: one code path for every wire config.
+"""Composable halo-exchange schedules, executed as two-phase LayerPrograms.
 
 The paper's three contributions are orthogonal *axes* of the halo exchange,
 not separate exchanges:
@@ -13,9 +13,8 @@ not separate exchanges:
 This module makes the composition explicit. An :class:`ExchangeSchedule` is
 a sequence of :class:`StageSpec` stages — the single ``flat`` level, or
 (``intra``, ``inter``) for the hierarchical exchange — and every stage
-independently chooses its wire format (``bits``) and caching policy
-(``cd``). The trainer dispatches each GCN layer through
-:meth:`ExchangeSchedule.run_layer` regardless of configuration, so e.g.
+independently chooses its wire format (``bits``), caching policy (``cd``),
+and *scheduling* (``overlap``), so e.g.
 
   * ``flat  × Int2 × delayed(3)``                       (DistGNN + quant),
   * ``intra: fp32 sync  |  inter: Int2 delayed(4)``     (fresh fast level,
@@ -23,6 +22,31 @@ independently chooses its wire format (``bits``) and caching policy
   * ``intra: Int2 sync  |  inter: Int2 sync``           (Int2 everywhere)
 
 are all the same code path with different schedule entries.
+
+The issue/finalize protocol (two-phase LayerProgram)
+----------------------------------------------------
+
+At 1000s of workers the epoch time is won by hiding the slow inter-group
+wire behind the local bucketed aggregation (DistGNN's delayed-aggregation
+overlap, MG-GCN's comm/compute pipelining). A layer's exchange therefore
+executes in two phases compiled by :meth:`ExchangeSchedule.layer_program`:
+
+  ``issue``     assembles every overlapped stage's send buffer and launches
+                its full wire pipeline — the ``inter`` stage first, since
+                its collectives are the slow ones — and applies the
+                delayed-comm cache refresh to the in-flight receives;
+  ``finalize``  scatters the received rows into the local accumulator.
+
+The trainer sequences ``issue -> local bucketed aggregation -> finalize``:
+in the traced program the wire collectives have no data dependency on the
+local aggregation, and they appear *before* it, so XLA's scheduler is free
+to overlap the in-flight collectives with the hot compute (the dry-run
+harness verifies the resulting collective order in the lowered HLO —
+``launch/hlo_stats.collective_order``). A stage with ``overlap=False``
+runs its whole pipeline inside ``finalize`` instead, reproducing the
+strictly sequential trace bit-for-bit — the parity fallback. Overlap never
+changes values, only op order: both phases compute the same recvs with the
+same per-stage PRNG folds.
 
 Execution model per stage (forward):
 
@@ -33,14 +57,23 @@ Execution model per stage (forward):
 Every stage's wire pipeline is self-transpose (reduce-scatter^T =
 all-gather, all_to_all^T = all_to_all), so ONE quantized
 ``jax.custom_vjp`` — :func:`quantized_exchange`, parameterized by a static
-:class:`StageTopo` — serves flat, intra and inter stages alike: the
-backward pass re-applies the same exchange to the (re-quantized)
-cotangents, which Lemma 1's stochastic rounding keeps unbiased.
+:class:`StageTopo` — serves flat, intra and inter stages alike. The VJP
+splits at the same phase boundary as the forward: the custom rule covers
+the wire segment (pre-wire + quantized all_to_all), while the post-wire
+all_gather is left to JAX's built-in collective transposes. The backward
+pass therefore decomposes into independently schedulable collective
+segments — psum_scatter of the cotangent (the all_gather's transpose),
+then the re-quantized all_to_all (unbiased per Lemma 1's stochastic
+rounding) — instead of one opaque custom-VJP region, giving the scheduler
+the same freedom to overlap the backward wire with the backward of the
+local aggregation.
 
 Delayed stages own their slice of the per-layer halo cache: the schedule
 decides the cache pytree structure (one buffer per delayed stage per
 layer), refreshes a stage whenever ``epoch % cd == 0``, and serves the
 stop-gradient stale buffer otherwise. Sync stages carry no cache state.
+For overlapped stages the refresh select runs in ``issue`` so the stale
+epochs keep the same two-phase structure.
 
 Works identically under ``shard_map`` (real meshes) and ``jax.vmap``
 (virtual workers), since both implement named-axis collective semantics.
@@ -235,30 +268,31 @@ def _post_wire(y: jax.Array, topo: StageTopo) -> jax.Array:
     return full.reshape(topo.wire_chunks * topo.shard_size * s, feat)
 
 
-def exchange_fp32(send: jax.Array, topo: StageTopo) -> jax.Array:
-    """FP32 exchange of an assembled send buffer. Exact VJP via JAX's
-    built-in collective transposes (the pipeline is self-transpose)."""
-    return _post_wire(_wire_a2a(_pre_wire(send, topo), topo), topo)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def quantized_exchange(send, key, topo: StageTopo, bits: int):
-    """THE quantized exchange — the exchange layer's single custom VJP.
-
-    Quantization happens on the wire buffer (for ``grouped`` topologies
-    that is *after* the psum_scatter: the merged partials are what crosses
-    the network), the all_to_all carries the int payload plus the fp32
-    (zero, scale) per 4-row quant group, and dequantization happens before
-    any post-wire fan-out.
-    """
-    w = _pre_wire(send, topo)
+def _quantized_wire(w: jax.Array, key, topo: StageTopo, bits: int) -> jax.Array:
+    """Quantize a wire-level buffer, all_to_all the payload, dequantize."""
     q, params = quantize(w, bits, key)
     qr = _wire_a2a(q.astype(jnp.int32), topo)
     # fp32 (zero, scale) ride along — the paper's "params" wire term (Eqn 5).
     zr = _wire_a2a(params.zero[:, None], topo).reshape(-1)
     sr = _wire_a2a(params.scale[:, None], topo).reshape(-1)
-    deq = dequantize(qr, QuantParams(zr, sr))
-    return _post_wire(deq, topo)
+    return dequantize(qr, QuantParams(zr, sr))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def quantized_exchange(send, key, topo: StageTopo, bits: int):
+    """THE quantized wire segment — the exchange layer's single custom VJP.
+
+    Covers the issue-phase half of the pipeline: pre-wire (the psum_scatter
+    for ``grouped`` topologies — the merged partials are what crosses the
+    network), quantization of the wire buffer, the all_to_all of the int
+    payload plus the fp32 (zero, scale) per 4-row quant group, and
+    dequantization. The post-wire all_gather (:func:`stage_finalize`) stays
+    *outside* the custom rule, so its transpose (a psum_scatter of the
+    cotangent) is generated by JAX and schedules independently of the
+    backward wire — the VJP splits at the same boundary as the forward's
+    issue/finalize phases.
+    """
+    return _quantized_wire(_pre_wire(send, topo), key, topo, bits)
 
 
 def _quantized_exchange_fwd(send, key, topo, bits):
@@ -267,10 +301,12 @@ def _quantized_exchange_fwd(send, key, topo, bits):
 
 def _quantized_exchange_bwd(topo, bits, key, g):
     # Self-transpose pipeline: the reverse exchange IS the same exchange.
-    # Cotangents are re-quantized with a folded key — unbiased per Lemma 1.
+    # ``g`` arrives at wire level (the post-wire all_gather's transpose —
+    # a psum_scatter — has already run under JAX's built-in rules), so the
+    # cotangent is re-quantized directly and fanned back out through the
+    # post-wire after its all_to_all — unbiased per Lemma 1.
     gkey = jax.random.fold_in(key, 0x5BD1)
-    gq = quantized_exchange(g, gkey, topo, bits)
-    return gq, None
+    return _post_wire(_quantized_wire(g, gkey, topo, bits), topo), None
 
 
 quantized_exchange.defvjp(_quantized_exchange_fwd, _quantized_exchange_bwd)
@@ -288,15 +324,33 @@ def _check_quant_alignment(topo: StageTopo, rows: int) -> None:
             f"multiple of the quant row group ({ROW_GROUP})")
 
 
-def stage_exchange(send: jax.Array, topo: StageTopo, bits: int,
-                   key: Optional[jax.Array]) -> jax.Array:
-    """One stage's exchange of an assembled send buffer (fp32 or quantized)."""
+def stage_issue(send: jax.Array, topo: StageTopo, bits: int,
+                key: Optional[jax.Array]) -> jax.Array:
+    """Launch one stage's wire pipeline on an assembled send buffer.
+
+    Runs pre-wire + (quantized) all_to_all + dequantize and returns the
+    wire-level recv buffer — still sharded 1/W per worker for ``grouped``
+    topologies. :func:`stage_finalize` fans it back out.
+    """
     if bits == 0:
-        return exchange_fp32(send, topo)
+        return _wire_a2a(_pre_wire(send, topo), topo)
     if key is None:
         raise ValueError("quantized exchange needs a PRNG key")
     _check_quant_alignment(topo, send.shape[0])
     return quantized_exchange(send, key, topo, bits)
+
+
+def stage_finalize(wire: jax.Array, topo: StageTopo) -> jax.Array:
+    """Post-wire fan-out of a wire-level recv buffer (all_gather for
+    ``grouped`` topologies, identity for ``a2a``)."""
+    return _post_wire(wire, topo)
+
+
+def stage_exchange(send: jax.Array, topo: StageTopo, bits: int,
+                   key: Optional[jax.Array]) -> jax.Array:
+    """One stage's full exchange of an assembled send buffer (fp32 or
+    quantized): issue + finalize back-to-back."""
+    return stage_finalize(stage_issue(send, topo, bits, key), topo)
 
 
 # --------------------------------------------------------------------------
@@ -306,17 +360,25 @@ def stage_exchange(send: jax.Array, topo: StageTopo, bits: int,
 
 @dataclass(frozen=True)
 class StageSpec:
-    """One exchange stage: a level with its wire format and caching policy.
+    """One exchange stage: a level with its wire format, caching policy and
+    scheduling.
 
-    ``bits`` — 0 (fp32) or 2/4/8 (stochastic quantization).
-    ``cd``   — 1 = sync (fresh exchange every epoch); cd > 1 = delayed
-               communication: refresh when ``epoch % cd == 0``, serve the
-               stale stop-gradient buffer otherwise (DistGNN's cd-N).
+    ``bits``    — 0 (fp32) or 2/4/8 (stochastic quantization).
+    ``cd``      — 1 = sync (fresh exchange every epoch); cd > 1 = delayed
+                  communication: refresh when ``epoch % cd == 0``, serve the
+                  stale stop-gradient buffer otherwise (DistGNN's cd-N).
+    ``overlap`` — True issues this stage's wire pipeline in the layer's
+                  ``issue`` phase, *before* the local bucketed aggregation,
+                  so XLA can hide the in-flight collectives behind the hot
+                  compute; False runs it sequentially in ``finalize`` (the
+                  bit-identical parity fallback). Overlap changes op order
+                  only, never values.
     """
 
     level: str   # "flat" | "intra" | "inter"
     bits: int = 0
     cd: int = 1
+    overlap: bool = False
 
     def __post_init__(self):
         if self.level not in STAGE_LEVELS:
@@ -332,7 +394,8 @@ class StageSpec:
 
     def as_dict(self) -> dict:
         return {"level": self.level, "bits": self.bits,
-                "policy": f"delayed({self.cd})" if self.delayed else "sync"}
+                "policy": f"delayed({self.cd})" if self.delayed else "sync",
+                "overlap": self.overlap}
 
 
 @dataclass(frozen=True)
@@ -377,9 +440,13 @@ class ExchangeSchedule:
 
     @staticmethod
     def flat(nparts: int, bits: int = 0, cd: int = 1,
-             axis_name: str = "workers") -> "ExchangeSchedule":
+             axis_name: str = "workers",
+             overlap: Optional[bool] = None) -> "ExchangeSchedule":
+        """``overlap=None`` keeps the flat exchange sequential (one fast
+        all_to_all; nothing slow enough to be worth hiding by default)."""
         return ExchangeSchedule(
-            stages=(StageSpec("flat", bits=bits, cd=cd),),
+            stages=(StageSpec("flat", bits=bits, cd=cd,
+                              overlap=bool(overlap)),),
             nparts=nparts, axis_name=axis_name)
 
     @staticmethod
@@ -387,10 +454,19 @@ class ExchangeSchedule:
                      intra_bits: int = 0, inter_bits: int = 0,
                      intra_cd: int = 1, inter_cd: int = 1,
                      node_axis: str = "node",
-                     group_axis: str = "group") -> "ExchangeSchedule":
+                     group_axis: str = "group",
+                     overlap: Optional[bool] = None) -> "ExchangeSchedule":
+        """``overlap=None`` defaults to True: hierarchical schedules exist
+        to scale past the slow inter-group wire, and hiding that wire
+        behind the local aggregation is where the paper's scheme wins at
+        1000s of workers. ``overlap=False`` is the sequential parity
+        fallback."""
+        overlap = True if overlap is None else overlap
         return ExchangeSchedule(
-            stages=(StageSpec("intra", bits=intra_bits, cd=intra_cd),
-                    StageSpec("inter", bits=inter_bits, cd=inter_cd)),
+            stages=(StageSpec("intra", bits=intra_bits, cd=intra_cd,
+                              overlap=overlap),
+                    StageSpec("inter", bits=inter_bits, cd=inter_cd,
+                              overlap=overlap)),
             nparts=num_groups * group_size,
             node_axis=node_axis, group_axis=group_axis,
             num_groups=num_groups, group_size=group_size)
@@ -444,48 +520,32 @@ class ExchangeSchedule:
 
     # -- execution ---------------------------------------------------------
 
+    def layer_program(self, wd, agg_backend: str = "coo") -> "LayerProgram":
+        """Compile this schedule against a worker's plans into the
+        two-phase :class:`LayerProgram` the trainer sequences as
+        ``issue -> local aggregation -> finalize``."""
+        return LayerProgram(self, wd, agg_backend=agg_backend)
+
     def run_layer(self, h: jax.Array, local_agg: jax.Array, wd,
                   key: Optional[jax.Array],
                   cache_entry: Optional[Sequence[jax.Array]] = None,
                   epoch: Optional[jax.Array] = None,
                   agg_backend: str = "coo"
                   ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
-        """One GCN layer's full exchange: every stage in order, each with
-        its own wire format and caching policy.
+        """One GCN layer's full exchange in a single call (compatibility
+        shim over :meth:`layer_program`): issue + finalize back-to-back
+        against an already-computed local aggregation.
 
-        ``cache_entry`` holds one stale recv buffer per *delayed* stage (in
-        stage order); ``epoch`` drives the per-stage refresh. Returns the
-        aggregated output and the new cache entry (empty for all-sync
-        schedules). ``agg_backend`` selects the receive-side scatter
-        realization (see :func:`scatter_recv`).
-
-        Note on delayed stages under jit: ``epoch`` is a traced value, so
-        the lowered program contains (and executes) every stage's
-        collectives on stale epochs too — ``jnp.where`` merely selects the
-        stale buffer. A real async runtime skips those sends; the
-        per-stage cd amortization in :meth:`wire_volume_bytes` models that
-        runtime, not the lowered HLO.
+        Since ``local_agg`` is already traced by the time this runs, the
+        two phases are adjacent and no wire/compute overlap window exists
+        — callers wanting the overlap must drive the
+        :class:`LayerProgram` phases themselves (the trainer does).
+        Values are identical either way.
         """
-        acc = local_agg
-        new_entry: List[jax.Array] = []
-        ci = 0
-        for si, stage in enumerate(self.stages):
-            plan = self.plan_for(stage, wd)
-            kq = jax.random.fold_in(key, si) if key is not None else None
-            send = assemble_send(h, plan)
-            recv = stage_exchange(send, self.topo(stage), stage.bits, kq)
-            if stage.delayed:
-                if cache_entry is None or epoch is None:
-                    raise ValueError(
-                        f"stage {stage.level!r} is delayed(cd={stage.cd}) "
-                        "and needs a halo cache + epoch")
-                refresh = (epoch % stage.cd) == 0
-                stale = jax.lax.stop_gradient(cache_entry[ci])
-                recv = jnp.where(refresh, recv, stale)
-                new_entry.append(jax.lax.stop_gradient(recv))
-                ci += 1
-            acc = scatter_recv(acc, recv, plan, agg_backend=agg_backend)
-        return acc, tuple(new_entry)
+        prog = self.layer_program(wd, agg_backend=agg_backend)
+        return prog.finalize(
+            local_agg, prog.issue(h, key, cache_entry=cache_entry,
+                                  epoch=epoch))
 
     # -- cache layout ------------------------------------------------------
 
@@ -523,7 +583,7 @@ class ExchangeSchedule:
 
         The cd amortization models an async runtime that skips sends on
         stale epochs; the jit-lowered step executes every stage's
-        collectives regardless (see :meth:`run_layer`), so HLO-parsed
+        collectives regardless (see :class:`LayerProgram`), so HLO-parsed
         collective bytes are the *un*-amortized per-epoch figure."""
         return {
             s.level: stats.volume_bytes(
@@ -531,3 +591,117 @@ class ExchangeSchedule:
                 stage=None if s.level == "flat" else s.level, cd=s.cd)
             for s in self.stages
         }
+
+
+# --------------------------------------------------------------------------
+# Two-phase LayerProgram: issue the wire, aggregate locally, finalize
+# --------------------------------------------------------------------------
+
+
+class LayerInFlight(NamedTuple):
+    """Per-layer state between the ``issue`` and ``finalize`` phases.
+
+    ``recv[si]`` holds stage ``si``'s in-flight (cache-refreshed) recv
+    buffer when the stage was issued, else ``None`` — sequential stages run
+    their pipeline inside ``finalize`` from the carried ``h``/``key``.
+    ``entry[si]`` is the issued stage's new halo-cache entry (``None`` for
+    sync or not-yet-run stages).
+    """
+
+    h: jax.Array
+    key: Optional[jax.Array]
+    epoch: Optional[jax.Array]
+    cache_entry: Optional[Sequence[jax.Array]]
+    recv: Tuple[Optional[jax.Array], ...]
+    entry: Tuple[Optional[jax.Array], ...]
+
+
+class LayerProgram:
+    """One layer's exchange schedule compiled into (issue, finalize) phases.
+
+    ``issue`` launches every ``overlap`` stage's wire pipeline — inter
+    first, so the slow collectives enter the program earliest — and applies
+    the delayed-comm cache refresh to the in-flight receives. ``finalize``
+    scatters all receives into the accumulator, running any sequential
+    (``overlap=False``) stage's pipeline on the spot, which reproduces the
+    pre-overlap trace order bit-for-bit.
+
+    Note on delayed stages under jit: ``epoch`` is a traced value, so the
+    lowered program contains (and executes) every stage's collectives on
+    stale epochs too — ``jnp.where`` merely selects the stale buffer. A
+    real async runtime skips those sends; the per-stage cd amortization in
+    :meth:`ExchangeSchedule.wire_volume_bytes` models that runtime, not the
+    lowered HLO.
+    """
+
+    def __init__(self, schedule: ExchangeSchedule, wd,
+                 agg_backend: str = "coo"):
+        self.schedule = schedule
+        self.agg_backend = agg_backend
+        self._stages = tuple(
+            (spec, schedule.plan_for(spec, wd), schedule.topo(spec))
+            for spec in schedule.stages)
+        # Cache-entry slot per delayed stage, in stage order (the cache
+        # pytree layout is overlap-agnostic).
+        self._cache_slot = {si: ci for ci, si
+                            in enumerate(schedule.delayed_indices)}
+        # Overlapped stages issue in reverse stage order: the inter stage's
+        # slow pipeline enters the program before the intra stage's.
+        self._issue_order = tuple(
+            si for si in reversed(range(len(self._stages)))
+            if self._stages[si][0].overlap)
+
+    def _wire(self, si: int, h: jax.Array, key) -> jax.Array:
+        spec, plan, topo = self._stages[si]
+        kq = jax.random.fold_in(key, si) if key is not None else None
+        return stage_exchange(assemble_send(h, plan), topo, spec.bits, kq)
+
+    def _refresh(self, si: int, recv, cache_entry, epoch):
+        """Delayed-comm select: fresh recv on refresh epochs, the stale
+        stop-gradient buffer otherwise. Returns (recv, new cache entry)."""
+        spec = self._stages[si][0]
+        if cache_entry is None or epoch is None:
+            raise ValueError(
+                f"stage {spec.level!r} is delayed(cd={spec.cd}) "
+                "and needs a halo cache + epoch")
+        refresh = (epoch % spec.cd) == 0
+        stale = jax.lax.stop_gradient(cache_entry[self._cache_slot[si]])
+        recv = jnp.where(refresh, recv, stale)
+        return recv, jax.lax.stop_gradient(recv)
+
+    def issue(self, h: jax.Array, key: Optional[jax.Array],
+              cache_entry: Optional[Sequence[jax.Array]] = None,
+              epoch: Optional[jax.Array] = None) -> LayerInFlight:
+        """Launch every overlapped stage's wire pipeline (inter first)."""
+        n = len(self._stages)
+        recv: List[Optional[jax.Array]] = [None] * n
+        entry: List[Optional[jax.Array]] = [None] * n
+        for si in self._issue_order:
+            r = self._wire(si, h, key)
+            if self._stages[si][0].delayed:
+                r, entry[si] = self._refresh(si, r, cache_entry, epoch)
+            recv[si] = r
+        return LayerInFlight(h=h, key=key, epoch=epoch,
+                             cache_entry=cache_entry,
+                             recv=tuple(recv), entry=tuple(entry))
+
+    def finalize(self, local_agg: jax.Array, inflight: LayerInFlight
+                 ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+        """Scatter all receives into the accumulator (running sequential
+        stages' pipelines now). Returns (aggregated output, new cache
+        entry — one buffer per delayed stage in stage order, empty for
+        all-sync schedules)."""
+        acc = local_agg
+        new_entry: List[jax.Array] = []
+        for si, (spec, plan, _) in enumerate(self._stages):
+            r = inflight.recv[si]
+            if r is None:
+                r = self._wire(si, inflight.h, inflight.key)
+                if spec.delayed:
+                    r, e = self._refresh(si, r, inflight.cache_entry,
+                                         inflight.epoch)
+                    new_entry.append(e)
+            elif spec.delayed:
+                new_entry.append(inflight.entry[si])
+            acc = scatter_recv(acc, r, plan, agg_backend=self.agg_backend)
+        return acc, tuple(new_entry)

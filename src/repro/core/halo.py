@@ -12,11 +12,15 @@ One exchange per GCN layer (Fig 2 steps 4–6):
 
 The exchange machinery itself lives in :mod:`repro.core.exchange` — plan
 containers, the fp32/quantized wire primitives (one shared quantized
-custom-VJP for every topology), and the composable
-:class:`~repro.core.exchange.ExchangeSchedule` the trainer dispatches
-through. This module keeps the historical convenience API: single-call
-flat and hierarchical exchanges, expressed as one-off schedules over the
-same primitives.
+custom-VJP for every topology, split at the issue/finalize phase
+boundary), and the composable
+:class:`~repro.core.exchange.ExchangeSchedule` whose two-phase
+:class:`~repro.core.exchange.LayerProgram` the trainer sequences as
+``issue -> local aggregation -> finalize`` to overlap the wire with
+compute. This module keeps the historical convenience API: single-call
+flat and hierarchical exchanges, expressed as one-off sequential stages
+over the same primitives (no overlap window — each call assembles,
+exchanges and returns in one step).
 
 Works under ``shard_map`` (real devices) and ``jax.vmap`` (virtual workers
 on one device — numerically identical, used by tests), since both implement
@@ -66,6 +70,8 @@ from repro.core.exchange import (
     stack_halo_plan,
     stack_hier_plan,
     stage_exchange,
+    stage_finalize,
+    stage_issue,
 )
 
 __all__ = [
@@ -75,6 +81,8 @@ __all__ = [
     "stack_hier_plan",
     "assemble_send",
     "scatter_recv",
+    "stage_issue",
+    "stage_finalize",
     "halo_exchange_fp32",
     "halo_exchange",
     "aggregate_with_halo",

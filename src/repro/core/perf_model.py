@@ -84,6 +84,20 @@ def delta_ratio(volume_rows: float, feat_dim: int, bits: int, hw: HardwareSpec) 
     return hw.latency / max(transfer, 1e-30)
 
 
+def _compute_terms(local_nnz, owned_rows, feat_dim: int, hidden_dim: int,
+                   num_layers: int, hw: HardwareSpec):
+    """Streaming-bound compute terms shared by the epoch-time models:
+    aggregation reads nnz * F, the NN op rows * F * H MACs (the paper's
+    CPU regime). Returns (t_aggr, t_nn) for the bottleneck worker x L."""
+    local_nnz = np.asarray(local_nnz, dtype=np.float64)
+    owned_rows = np.asarray(owned_rows, dtype=np.float64)
+    f = max(feat_dim, hidden_dim)
+    t_aggr = float((local_nnz * f * 4.0 / hw.th_cal).max()) * num_layers
+    flops = owned_rows * f * hidden_dim * 2.0
+    t_nn = float((flops / (hw.th_cal * 4.0)).max()) * num_layers
+    return t_aggr, t_nn
+
+
 def epoch_time_model(
     volume_rows: np.ndarray,     # [P, P] feature rows on the wire
     local_nnz: np.ndarray,       # [P] local aggregation edges per worker
@@ -96,13 +110,11 @@ def epoch_time_model(
 ) -> dict:
     """Full-epoch time split into the Fig-12 components (per GCN layer x L).
 
-    Aggregation: nnz * F reads; NN op: rows * F * H MACs (treated as
-    streaming-bound on CPUs, the paper's regime); comm via Eqns 2/6.
+    Compute terms via :func:`_compute_terms`; comm via Eqns 2/6.
     """
     f = max(feat_dim, hidden_dim)
-    t_aggr = float((local_nnz * f * 4.0 / hw.th_cal).max()) * num_layers
-    flops = owned_rows * f * hidden_dim * 2.0
-    t_nn = float((flops / (hw.th_cal * 4.0)).max()) * num_layers
+    t_aggr, t_nn = _compute_terms(local_nnz, owned_rows, feat_dim,
+                                  hidden_dim, num_layers, hw)
     if bits == 0:
         t_comm = comm_time(volume_rows, f, hw) * num_layers
         t_quant = 0.0
@@ -117,3 +129,46 @@ def epoch_time_model(
     total = t_aggr + t_nn + t_comm + t_quant + t_sync
     return {"aggr": t_aggr, "nn": t_nn, "comm": t_comm, "quant": t_quant,
             "sync": t_sync, "total": total}
+
+
+def hier_epoch_time(
+    intra_bytes: float,          # per-layer intra-stage wire bytes
+    inter_bytes: float,          # per-layer inter-stage wire bytes
+    local_nnz,                   # [P] local aggregation edges per worker
+    owned_rows,                  # [P] owned nodes per worker
+    feat_dim: int,
+    hidden_dim: int,
+    num_layers: int,
+    hw: HardwareSpec,
+    intra_bw_factor: float = 8.0,
+) -> dict:
+    """Two-level epoch-time model with and without wire/compute overlap.
+
+    Compute terms follow :func:`epoch_time_model`'s streaming
+    approximations; the wire terms take the schedule's per-stage predicted
+    bytes (``ExchangeSchedule.wire_volume_bytes`` — Eqns 2/5/6 with the
+    per-stage bits/cd already folded in). The intra stage rides the
+    in-node fabric at ``intra_bw_factor * bw_comm``; the inter stage rides
+    the slow wire at ``bw_comm``.
+
+    ``sequential`` serializes every term — the pre-overlap ``run_layer``
+    trace. ``overlap`` models the two-phase LayerProgram: the inter-group
+    pipeline is in flight during the local bucketed aggregation *and* the
+    intra exchange, so only its exposed remainder
+    ``max(0, t_inter - (t_aggr + t_intra))`` adds to the critical path —
+    the Eqn-8 regime where quantization (shrinking t_inter) and overlap
+    (hiding it) compose to keep strong scaling alive past 1k workers.
+    """
+    t_aggr, t_nn = _compute_terms(local_nnz, owned_rows, feat_dim,
+                                  hidden_dim, num_layers, hw)
+    t_intra = intra_bytes / (hw.bw_comm * intra_bw_factor) * num_layers
+    t_inter = inter_bytes / hw.bw_comm * num_layers
+    sequential = t_aggr + t_nn + t_intra + t_inter
+    exposed = max(0.0, t_inter - (t_aggr + t_intra))
+    overlap = t_aggr + t_nn + t_intra + exposed
+    return {
+        "aggr": t_aggr, "nn": t_nn, "intra": t_intra, "inter": t_inter,
+        "sequential": sequential, "overlap": overlap,
+        "inter_hidden_fraction": round(
+            1.0 - exposed / t_inter, 4) if t_inter else 1.0,
+    }

@@ -238,6 +238,12 @@ class DistConfig:
     inter_bits: Optional[int] = None
     intra_cd: Optional[int] = None
     inter_cd: Optional[int] = None
+    # Two-phase layer scheduling: issue the exchange wire before the local
+    # bucketed aggregation so XLA can hide the in-flight collectives behind
+    # the hot compute. None = topology default (hierarchical schedules
+    # overlap, flat stays sequential); True/False force it. Overlap changes
+    # op order only, never values.
+    overlap: Optional[bool] = None
 
     def __post_init__(self):
         if self.agg_backend not in ("coo", "ell"):
@@ -275,9 +281,11 @@ class DistConfig:
                 inter_bits=pick(self.inter_bits, self.bits),
                 intra_cd=pick(self.intra_cd, self.cd),
                 inter_cd=pick(self.inter_cd, self.cd),
-                node_axis=self.node_axis, group_axis=self.group_axis)
+                node_axis=self.node_axis, group_axis=self.group_axis,
+                overlap=self.overlap)
         return ExchangeSchedule.flat(self.nparts, bits=self.bits, cd=self.cd,
-                                     axis_name=self.axis_name)
+                                     axis_name=self.axis_name,
+                                     overlap=self.overlap)
 
     def sync_fp32(self) -> "DistConfig":
         """This config with every stage forced to fresh fp32 (eval wire)."""
@@ -384,7 +392,13 @@ def _local_aggregate(h: jax.Array, wd: WorkerData,
 def _dist_forward(params, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
                   prop_mask, key, train: bool,
                   halo_cache=None, epoch=None, schedule=None):
-    """Per-worker forward, dispatched through the exchange schedule.
+    """Per-worker forward, sequenced through the schedule's LayerProgram:
+    per layer, ``issue`` (launch overlapped wire pipelines, inter first) ->
+    local bucketed aggregation -> ``finalize`` (scatter receives). The
+    in-flight collectives carry no data dependency on the local aggregation
+    and precede it in the trace, so XLA can overlap the slow wire with the
+    hot compute; ``overlap=False`` stages run inside ``finalize``,
+    reproducing the sequential trace bit-for-bit.
 
     ``halo_cache`` is the schedule-owned per-layer pytree (one stale recv
     buffer per delayed stage per layer); ``epoch`` drives each stage's
@@ -394,16 +408,16 @@ def _dist_forward(params, cfg: M.GCNConfig, dc: DistConfig, wd: WorkerData,
     sched = schedule if schedule is not None else dc.schedule()
     if halo_cache is None and sched.uses_cache:
         sched = sched.as_sync()
+    prog = sched.layer_program(wd, agg_backend=dc.agg_backend)
     new_cache: List = []
 
     def agg_fn_factory(dropout_key):
         def agg_fn(l: int, h: jax.Array) -> jax.Array:
-            local = _local_aggregate(h, wd, dc.agg_backend)
             kq = jax.random.fold_in(key, 7919 + l) if key is not None else None
             entry = halo_cache[l] if halo_cache is not None else None
-            agg, ne = sched.run_layer(h, local, wd, kq,
-                                      cache_entry=entry, epoch=epoch,
-                                      agg_backend=dc.agg_backend)
+            inflight = prog.issue(h, kq, cache_entry=entry, epoch=epoch)
+            local = _local_aggregate(h, wd, dc.agg_backend)
+            agg, ne = prog.finalize(local, inflight)
             new_cache.append(ne)
             return agg
         return agg_fn

@@ -21,7 +21,12 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.graph.structure import Graph, bucketed_slot_count, coo_to_csr
+from repro.graph.structure import (
+    Graph,
+    bucket_padded_degrees,
+    bucketed_slot_count,
+    coo_to_csr,
+)
 
 
 def _neighbor_csr(g: Graph):
@@ -32,9 +37,26 @@ def _neighbor_csr(g: Graph):
     return csr.indptr, csr.indices
 
 
-def default_node_weights(g: Graph) -> np.ndarray:
-    """Paper §7.2: weight = in-degree, plus train-mask so train nodes balance."""
-    w = 1.0 + g.in_degrees().astype(np.float64)
+def default_node_weights(g: Graph, bucket_aware: bool = True) -> np.ndarray:
+    """Paper §7.2 weights, bucket-aware by default.
+
+    The §7.2 objective balances aggregation FLOPs (in-degree) and training
+    samples (train mask). The trainer's hot path, however, pays the
+    degree-bucketed blocked-ELL layout's *padded-slot* cost, not raw nnz:
+    a row of degree d occupies the smallest growth-2 ladder K >= d slots,
+    and ``stack_bucketed_ells`` then pads every bucket to the max row
+    count across workers — a worker with a hub-heavy bucket ladder drags
+    every peer's padding up. ``bucket_aware=True`` therefore weights each
+    node by its padded slot count K(d) (the per-node share of the
+    per-degree-class counts the stacked layout realizes), so balancing the
+    partition balances the slots the kernel actually executes.
+    ``bucket_aware=False`` keeps the raw-degree §7.2 weights.
+    """
+    deg = g.in_degrees()
+    if bucket_aware:
+        w = 1.0 + bucket_padded_degrees(deg).astype(np.float64)
+    else:
+        w = 1.0 + deg.astype(np.float64)
     if g.train_mask is not None:
         # Scale so train-sample balance matters as much as FLOP balance.
         w = w + g.train_mask.astype(np.float64) * float(w.mean())
@@ -220,8 +242,9 @@ def partition_stats(g: Graph, part: np.ndarray) -> dict:
     local = ~cut
     deg = np.zeros(g.num_nodes, dtype=np.int64)
     np.add.at(deg, g.dst[local], 1)
-    agg_slots = sum(bucketed_slot_count(deg[part == p])
-                    for p in range(nparts))
+    per_part_slots = np.array([bucketed_slot_count(deg[part == p])
+                               for p in range(nparts)], dtype=np.int64)
+    agg_slots = int(per_part_slots.sum())
     local_nnz = int(local.sum())
     return {
         "nparts": nparts,
@@ -230,6 +253,13 @@ def partition_stats(g: Graph, part: np.ndarray) -> dict:
         "load_imbalance": float(loads.max() / max(loads.mean(), 1e-9)),
         "size_imbalance": float(sizes.max() / max(sizes.mean(), 1e-9)),
         "sizes": sizes.tolist(),
-        "agg_padded_slots": int(agg_slots),
+        "agg_padded_slots": agg_slots,
         "agg_padding_ratio": round(agg_slots / max(local_nnz, 1), 4),
+        # Bucket-aware balance: stack_bucketed_ells pads every bucket to the
+        # max row count across workers, so the worst worker's slot count is
+        # what every worker executes — this ratio is the quantity the
+        # bucket-aware node weights exist to pull toward 1.
+        "agg_slots_per_part": per_part_slots.tolist(),
+        "agg_slot_imbalance": float(
+            per_part_slots.max() / max(per_part_slots.mean(), 1e-9)),
     }

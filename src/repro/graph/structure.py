@@ -263,17 +263,27 @@ def degree_bucket_ladder(max_degree: int, min_k: int = 1,
         k = max(k * growth, k + 1)
 
 
+def bucket_padded_degrees(degrees: np.ndarray, min_k: int = 1,
+                          growth: int = 2) -> np.ndarray:
+    """Per-row padded slot count under the bucket ladder: the smallest
+    ladder K >= degree (0 for degree-0 rows, which join no bucket). This
+    is the cost the blocked-ELL layout actually pays per row — the
+    bucket-aware partitioner weights nodes by it instead of raw degree."""
+    deg = np.asarray(degrees)
+    out = np.zeros(deg.shape, dtype=np.int64)
+    pos = deg > 0
+    if pos.any():
+        ks = np.asarray(degree_bucket_ladder(int(deg.max()), min_k, growth))
+        out[pos] = ks[np.searchsorted(ks, deg[pos])]
+    return out
+
+
 def bucketed_slot_count(degrees: np.ndarray, min_k: int = 1,
                         growth: int = 2) -> int:
     """Padded slots a degree multiset occupies under the bucket ladder —
     the layout cost ``partition_stats`` accounts per partition without
     materializing the layout."""
-    deg = np.asarray(degrees)
-    deg = deg[deg > 0]
-    if not len(deg):
-        return 0
-    ks = np.asarray(degree_bucket_ladder(int(deg.max()), min_k, growth))
-    return int(ks[np.searchsorted(ks, deg)].sum())
+    return int(bucket_padded_degrees(degrees, min_k, growth).sum())
 
 
 def bucketed_ell_from_csr(csr: CSR, min_k: int = 1,

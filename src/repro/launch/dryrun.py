@@ -250,34 +250,46 @@ def _finish(rec: dict, t0: float, save: bool) -> dict:
 
 def run_gcn_dryrun(multi_pod: bool, save: bool = True, groups: int = 0,
                    bits: int = 2, cd: int = 1,
-                   agg_backend: str = "ell") -> dict:
+                   agg_backend: str = "ell", overlap=None,
+                   scale: int = 13, chips: int = 0,
+                   assert_overlap: bool = False) -> dict:
     """Dry-run the paper's distributed GCN trainer on the production mesh,
     dispatched through its ExchangeSchedule.
 
     ``groups=0`` is 1-D graph-parallel over all chips (flat schedule);
     ``groups=G`` lowers the two-level (group, node) shard_map trainer on a
-    G x (chips/G) mesh. ``bits``/``cd`` thread straight into the schedule,
-    so e.g. ``--groups 16 --cd 4`` dry-runs delayed-comm on the
-    hierarchical exchange. The record carries the schedule description and
+    G x (chips/G) mesh. ``bits``/``cd``/``overlap`` thread straight into
+    the schedule, so e.g. ``--groups 16 --cd 4`` dry-runs delayed-comm on
+    the hierarchical exchange. The record carries the schedule description,
     the CommStats per-stage wire-byte predictions next to the collective
-    bytes parsed from the partitioned HLO.
+    bytes parsed from the partitioned HLO, and the collective scheduling
+    order parsed from the *lowered* StableHLO — the overlap proof: with
+    the two-phase LayerProgram the wire collectives precede the bucketed
+    aggregation's dot ops in program order.
+
+    ``chips``/``scale`` shrink the run for the fast CI check (default is
+    the full 256/512-chip mesh on rmat-13); ``assert_overlap`` flips the
+    record to error status when the parsed order shows the wire is NOT
+    issued before the aggregation compute.
     """
     import numpy as np
     from repro.core import DistConfig, DistributedTrainer, GCNConfig
     from repro.core.trainer import prepare_distributed
     from repro.graph import (build_hierarchical_partitioned_graph,
                              build_partitioned_graph, rmat_graph)
+    from repro.launch.hlo_stats import collective_order
     from repro.launch.mesh import make_hier_worker_mesh
 
-    mesh_name = "2x16x16" if multi_pod else "16x16"
-    shape_name = "rmat13-fullbatch" + (f"-g{groups}" if groups else "")
+    nparts = chips or (512 if multi_pod else 256)
+    mesh_name = (f"{nparts}chips" if chips
+                 else ("2x16x16" if multi_pod else "16x16"))
+    shape_name = f"rmat{scale}-fullbatch" + (f"-g{groups}" if groups else "")
     rec = {"arch": "supergcn-graphsage", "shape": shape_name,
-           "mesh": mesh_name, "chips": 512 if multi_pod else 256, "status": "ok"}
+           "mesh": mesh_name, "chips": nparts, "status": "ok"}
     t0 = time.time()
     try:
-        nparts = 512 if multi_pod else 256
         # Structural stand-in graph (host preprocessing at laptop scale).
-        g = rmat_graph(13, edge_factor=8, seed=7).mean_normalized()
+        g = rmat_graph(scale, edge_factor=8, seed=7).mean_normalized()
         g.labels = np.zeros(g.num_nodes, np.int32)
         g.train_mask = np.ones(g.num_nodes, bool)
         feat = 128
@@ -289,13 +301,13 @@ def run_gcn_dryrun(multi_pod: bool, save: bool = True, groups: int = 0,
             gmesh = make_hier_worker_mesh(groups, group_size)
             dc = DistConfig(nparts=nparts, bits=bits, cd=cd,
                             num_groups=groups, group_size=group_size,
-                            agg_backend=agg_backend)
+                            agg_backend=agg_backend, overlap=overlap)
             pg = build_hierarchical_partitioned_graph(
                 g, groups, group_size, strategy="hybrid", seed=0)
         else:
             gmesh = make_worker_mesh(nparts)
             dc = DistConfig(nparts=nparts, bits=bits, cd=cd,
-                            agg_backend=agg_backend)
+                            agg_backend=agg_backend, overlap=overlap)
             pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
         wd = prepare_distributed(g, x, pg)
         cfg = GCNConfig(model="sage", in_dim=feat, hidden_dim=256,
@@ -307,6 +319,11 @@ def run_gcn_dryrun(multi_pod: bool, save: bool = True, groups: int = 0,
         rec["predicted_wire_bytes"] = trainer.schedule.wire_volume_bytes(
             pg.stats, feat)
         lowered = trainer.lower_step()
+        # Overlap evidence lives in the lowered (trace-order) module; the
+        # compiled text below is scheduler-normalized (see hlo_stats).
+        order = collective_order(lowered.as_text())
+        rec["collective_order"] = dict(order, events=order["events"][:64],
+                                       num_events=len(order["events"]))
         t1 = time.time()
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 2)
@@ -315,6 +332,20 @@ def run_gcn_dryrun(multi_pod: bool, save: bool = True, groups: int = 0,
         rec["collectives"] = parse_collectives(compiled.as_text())
         rec["comm_stats"] = pg.stats.as_dict()
         print(compiled.memory_analysis())
+        print(f"  collective order: wire_before_compute="
+              f"{order['wire_before_compute']} inter_wire_before_compute="
+              f"{order['inter_wire_before_compute']}")
+        if assert_overlap:
+            want_inter = bool(groups and groups > 1)
+            ok = order["wire_before_compute"] and (
+                order["inter_wire_before_compute"] or not want_inter)
+            if not ok:
+                raise AssertionError(
+                    "overlap check failed: wire collectives are not issued "
+                    f"before the aggregation compute (first_wire="
+                    f"{order['first_wire']}, first_inter_wire="
+                    f"{order['first_inter_wire']}, first_compute="
+                    f"{order['first_compute']})")
     except Exception as e:
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
@@ -340,13 +371,32 @@ def main():
     ap.add_argument("--agg-backend", default="ell", choices=("coo", "ell"),
                     help="with --gcn: aggregation realization (bucketed "
                          "blocked-ELL kernel dispatch vs COO scatter-add)")
+    ap.add_argument("--overlap", dest="overlap", action="store_true",
+                    default=None,
+                    help="with --gcn: force two-phase wire/compute overlap "
+                         "(default: on for hierarchical, off for flat)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="with --gcn: force the sequential parity schedule")
+    ap.add_argument("--scale", type=int, default=13,
+                    help="with --gcn: R-MAT scale of the stand-in graph")
+    ap.add_argument("--chips", type=int, default=0,
+                    help="with --gcn: worker count (0 = full production "
+                         "mesh; small values give a fast CI-sized dry-run)")
+    ap.add_argument("--assert-overlap", action="store_true",
+                    help="with --gcn: exit non-zero unless the lowered HLO "
+                         "issues the wire collectives before the "
+                         "aggregation compute")
     ap.add_argument("--hlo-out", action="store_true")
     args = ap.parse_args()
 
     if args.gcn:
-        run_gcn_dryrun(args.multi_pod, groups=args.groups, bits=args.bits,
-                       cd=args.cd, agg_backend=args.agg_backend)
-        return
+        rec = run_gcn_dryrun(args.multi_pod, groups=args.groups,
+                             bits=args.bits, cd=args.cd,
+                             agg_backend=args.agg_backend,
+                             overlap=args.overlap, scale=args.scale,
+                             chips=args.chips,
+                             assert_overlap=args.assert_overlap)
+        raise SystemExit(0 if rec["status"] == "ok" else 1)
     if args.all:
         results = []
         for a in ARCH_NAMES:

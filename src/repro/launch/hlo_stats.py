@@ -186,6 +186,92 @@ def while_trip_counts(hlo_text: str) -> List[int]:
 
 
 # --------------------------------------------------------------------------
+# Collective scheduling order (overlap evidence) from *lowered* StableHLO
+#
+# The compiled per-device HLO is scheduler-normalized — the CPU backend (and
+# TPU's latency-hiding scheduler) re-orders instructions by its own cost
+# model, so op order in ``compiled.as_text()`` carries no information about
+# the traced program. The *lowered* module (``lowered.as_text()``, StableHLO)
+# preserves trace order, which is exactly what the two-phase LayerProgram
+# controls: with ``overlap=True`` the exchange collectives are issued before
+# the local bucketed aggregation's dot_general ops and XLA is free to hide
+# the wire behind the compute; with ``overlap=False`` the aggregation
+# compute precedes the wire. ``collective_order`` parses that order.
+# --------------------------------------------------------------------------
+
+_STABLEHLO_COLLECTIVES = {
+    "stablehlo.all_to_all": "all-to-all",
+    "stablehlo.reduce_scatter": "reduce-scatter",
+    "stablehlo.all_gather": "all-gather",
+    "stablehlo.all_reduce": "all-reduce",
+    "stablehlo.collective_permute": "collective-permute",
+}
+# Wire starters: the ops that begin a stage's pipeline (the grouped inter
+# stage opens with its per-group psum_scatter = reduce-scatter; a2a stages
+# open with the all_to_all itself). all-gather/all-reduce are fan-out /
+# grad-sync ops, not wire starts.
+_WIRE_START = ("all-to-all", "reduce-scatter")
+_REPLICA_SHAPE_RE = re.compile(r"replica_groups\s*=\s*dense<.*?>\s*:\s*"
+                               r"tensor<(\d+)x(\d+)xi64>")
+
+
+def collective_order(lowered_text: str,
+                     compute_ops: Tuple[str, ...] = ("dot_general",)) -> dict:
+    """Program-order event trace of collectives vs aggregation compute.
+
+    ``lowered_text`` must be the *lowered* StableHLO module text (see block
+    comment above — compiled HLO order is meaningless). ``compute_ops``
+    names the StableHLO compute ops that realize the local aggregation:
+    the degree-bucketed segment-aggregate einsum lowers to ``dot_general``
+    (gather/scatter also appear in the exchange's assemble/recv paths, so
+    they cannot discriminate).
+
+    Returns::
+
+      {"events":              [{"line", "op", "class", "group_size"}, ...],
+       "first_wire":           first all-to-all / reduce-scatter event,
+       "first_inter_wire":     first reduce-scatter event (the grouped
+                               inter stage's pre-wire; None for flat),
+       "first_compute":        first compute_ops event,
+       "wire_before_compute":  first_wire precedes first_compute,
+       "inter_wire_before_compute": first_inter_wire precedes it too}
+    """
+    events: List[dict] = []
+    for i, line in enumerate(lowered_text.splitlines()):
+        for tag, kind in _STABLEHLO_COLLECTIVES.items():
+            if tag in line:
+                gm = _REPLICA_SHAPE_RE.search(line)
+                events.append({"line": i, "op": kind, "class": "collective",
+                               "group_size": int(gm.group(2)) if gm else None})
+                break
+        else:
+            for op in compute_ops:
+                if f"stablehlo.{op}" in line:
+                    events.append({"line": i, "op": op, "class": "compute",
+                                   "group_size": None})
+                    break
+
+    def first(pred):
+        return next((e for e in events if pred(e)), None)
+
+    first_wire = first(lambda e: e["op"] in _WIRE_START)
+    first_inter = first(lambda e: e["op"] == "reduce-scatter")
+    first_compute = first(lambda e: e["class"] == "compute")
+
+    def precedes(a, b):
+        return a is not None and b is not None and a["line"] < b["line"]
+
+    return {
+        "events": events,
+        "first_wire": first_wire,
+        "first_inter_wire": first_inter,
+        "first_compute": first_compute,
+        "wire_before_compute": precedes(first_wire, first_compute),
+        "inter_wire_before_compute": precedes(first_inter, first_compute),
+    }
+
+
+# --------------------------------------------------------------------------
 # Loop-aware FLOP / HBM-traffic estimation
 #
 # XLA's cost_analysis() counts while bodies ONCE (verified empirically), so

@@ -47,12 +47,13 @@ def run_gcn(args):
         dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd,
                         lr=args.lr, num_groups=groups, group_size=group_size,
                         inter_bits=args.inter_bits, inter_cd=args.inter_cd,
-                        agg_backend=args.agg_backend)
+                        agg_backend=args.agg_backend, overlap=args.overlap)
     else:
         pg = build_partitioned_graph(gn, args.nparts, strategy=args.strategy,
                                      seed=args.seed)
         dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd,
-                        lr=args.lr, agg_backend=args.agg_backend)
+                        lr=args.lr, agg_backend=args.agg_backend,
+                        overlap=args.overlap)
     s = pg.stats
     print(f"partition comm volumes: vanilla={s.vanilla} pre={s.pre} "
           f"post={s.post} hybrid={s.hybrid} (selected={s.selected})")
@@ -142,6 +143,13 @@ def main():
     ap.add_argument("--inter-cd", type=int, default=None,
                     help="override the inter-group stage's refresh period "
                          "(stale inter, fresh intra)")
+    ap.add_argument("--overlap", dest="overlap", action="store_true",
+                    default=None,
+                    help="issue the exchange wire before the local "
+                         "aggregation (two-phase LayerProgram; default: on "
+                         "for hierarchical schedules, off for flat)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="force the sequential parity schedule")
     ap.add_argument("--epochs", type=int, default=50)
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--mode", default="vmap", choices=["vmap", "shard_map"])

@@ -53,7 +53,7 @@ class TestScheduleConstruction:
         assert s.delayed_indices == (1,)  # only the inter stage is delayed
         d = s.describe()
         assert d["stages"][1] == {"level": "inter", "bits": 2,
-                                  "policy": "delayed(4)"}
+                                  "policy": "delayed(4)", "overlap": True}
 
     def test_invalid_schedules_rejected(self):
         with pytest.raises(ValueError):
@@ -72,8 +72,10 @@ class TestScheduleConstruction:
         dc = DistConfig(nparts=P, bits=2, cd=1, num_groups=G, group_size=W,
                         inter_cd=4)
         s = dc.schedule()
-        assert s.stages == (StageSpec("intra", bits=2, cd=1),
-                            StageSpec("inter", bits=2, cd=4))
+        # Hierarchical schedules overlap by default (the wire/compute
+        # two-phase LayerProgram); overlap=False is the parity fallback.
+        assert s.stages == (StageSpec("intra", bits=2, cd=1, overlap=True),
+                            StageSpec("inter", bits=2, cd=4, overlap=True))
         es = dc.sync_fp32().schedule()
         assert all(st.bits == 0 and st.cd == 1 for st in es.stages)
         with pytest.raises(ValueError):

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_stats import analyze_hlo, parse_collectives
+from repro.launch.hlo_stats import analyze_hlo, collective_order, parse_collectives
 
 
 def _compile(fn, *specs):
@@ -109,3 +109,69 @@ ENTRY %main (a: f32[2]) -> f32[2] {
         st = parse_collectives(txt)
         # 5 loop iterations x 1 psum (or unrolled equivalents)
         assert st["total"]["count"] >= 1
+
+
+class TestCollectiveOrder:
+    """collective_order parses overlap evidence from *lowered* StableHLO
+    (trace order; the compiled text is scheduler-normalized)."""
+
+    OVERLAPPED = """
+module @jit_step {
+  func.func public @main(%arg0: tensor<8x4xf32>) -> tensor<8x4xf32> {
+    %0 = "stablehlo.reduce_scatter"(%arg0) {replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>} : (tensor<8x4xf32>) -> tensor<2x4xf32>
+    %1 = "stablehlo.all_to_all"(%0) {replica_groups = dense<[[0, 4], [1, 5]]> : tensor<2x2xi64>} : (tensor<2x4xf32>) -> tensor<2x4xf32>
+    %2 = "stablehlo.all_gather"(%1) {replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>} : (tensor<2x4xf32>) -> tensor<8x4xf32>
+    %3 = stablehlo.dot_general %2, %2, contracting_dims = [1] x [0] : (tensor<8x4xf32>, tensor<4x8xf32>) -> tensor<8x8xf32>
+    return %2 : tensor<8x4xf32>
+  }
+}
+"""
+
+    SEQUENTIAL = """
+module @jit_step {
+  func.func public @main(%arg0: tensor<8x4xf32>) -> tensor<8x4xf32> {
+    %0 = stablehlo.dot_general %arg0, %arg0, contracting_dims = [1] x [0] : (tensor<8x4xf32>, tensor<4x8xf32>) -> tensor<8x8xf32>
+    %1 = "stablehlo.all_to_all"(%arg0) {replica_groups = dense<[[0, 4], [1, 5]]> : tensor<2x2xi64>} : (tensor<8x4xf32>) -> tensor<8x4xf32>
+    return %1 : tensor<8x4xf32>
+  }
+}
+"""
+
+    def test_wire_issued_before_compute(self):
+        order = collective_order(self.OVERLAPPED)
+        assert order["wire_before_compute"]
+        assert order["inter_wire_before_compute"]
+        # The grouped pre-wire opens the program; its replica group spans
+        # the 4-worker shard axis.
+        assert order["first_wire"]["op"] == "reduce-scatter"
+        assert order["first_wire"]["group_size"] == 4
+        assert order["first_compute"]["op"] == "dot_general"
+
+    def test_sequential_trace_detected(self):
+        order = collective_order(self.SEQUENTIAL)
+        assert not order["wire_before_compute"]
+        assert order["first_inter_wire"] is None
+        assert not order["inter_wire_before_compute"]
+        assert order["first_wire"]["op"] == "all-to-all"
+        assert order["first_wire"]["group_size"] == 2
+
+    def test_real_lowering_flat_overlap(self):
+        """End-to-end on a real lowered module: a toy program that issues
+        an all_to_all before its dot, under shard_map on 2 virtual
+        devices (the conftest provides 8 host devices)."""
+        mesh = jax.make_mesh((2,), ("w",))
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def worker(x):
+            recv = jax.lax.all_to_all(x, "w", split_axis=0,
+                                      concat_axis=0, tiled=False)
+            local = x[0] @ x[0].T
+            return local + recv[0] @ recv[0].T
+
+        f = shard_map(worker, mesh=mesh, in_specs=(P("w"),),
+                      out_specs=P("w"), check_rep=False)
+        txt = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((4, 2, 8), jnp.float32)).as_text()
+        order = collective_order(txt)
+        assert order["wire_before_compute"]
