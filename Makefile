@@ -1,7 +1,7 @@
 # Tier-1 verification (same command as ROADMAP.md).
 PY ?= python
 
-.PHONY: check check-fast check-overlap bench-comm bench-comm-sweep bench-agg
+.PHONY: check check-fast check-overlap spec-matrix bench-comm bench-comm-sweep bench-agg
 
 check:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -16,6 +16,12 @@ check-fast:
 check-overlap:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.dryrun \
 		--gcn --groups 2 --scale 10 --chips 8 --overlap --assert-overlap
+
+# Every canonical RunSpec in specs/ must stay buildable: each is driven
+# through build_session(spec).lower() (flat/fp32, hier/Int2-inter, cd>1,
+# coo fallback, shard_map, flagship) — the support-matrix PR gate.
+spec-matrix:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.run.matrix specs/
 
 bench-comm:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/comm_volume.py

@@ -9,102 +9,103 @@ time, and final eval accuracy on the SBM task.
 Per-stage rows (``bits_ablation_stage/``) ablate the bit width per
 *exchange stage* of the hierarchical schedule — Int2 on the slow
 inter-group wire with fp32 intra vs Int2 everywhere vs fp32 everywhere —
-the convergence evidence required before flipping the quantized-inter
-default (ROADMAP item 2): if the mixed schedule matches fp32 accuracy
-while carrying Int2-sized inter bytes, quantizing only the slow wire is
-free.
+the convergence evidence that justified flipping the hierarchical
+schedule's *default* inter wire to Int2 (``HIER_INTER_BITS_DEFAULT``):
+the mixed schedule matches fp32 accuracy while carrying Int2-sized inter
+bytes, so quantizing only the slow wire is free.
+
+Every run is a :class:`repro.run.RunSpec` driven through
+``build_session`` (a shared :class:`repro.run.BuildCache` keeps the
+partition/preprocessing work to one pass per topology); each row carries
+its spec content hash.
 """
 
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import DistConfig, DistributedTrainer, GCNConfig, prepare_distributed
 from repro.core.perf_model import FUGAKU_A64FX, comm_time
-from repro.graph import (build_hierarchical_partitioned_graph,
-                         build_partitioned_graph, sbm_graph)
-from repro.graph.generators import sbm_features
 from repro.quant import wire_bytes
+from repro.run import BuildCache, RunSpec, build_session
+
+
+def _base_spec(epochs: int, feat_dim: int) -> RunSpec:
+    return RunSpec().with_overrides([
+        "graph.source=sbm", "graph.nodes=1200", "graph.classes=8",
+        "graph.avg_degree=10", "graph.homophily=0.78", "graph.seed=21",
+        f"graph.feat_dim={feat_dim}", "graph.feat_noise=2.8",
+        "model.hidden_dim=64", "model.dropout=0.2", "model.label_prop=true",
+        f"exec.epochs={epochs}", "exec.lr=0.01", "exec.seed=0",
+    ])
 
 
 def run(epochs: int = 25, nparts: int = 4, feat_dim: int = 32) -> list:
-    g = sbm_graph(1200, 8, avg_degree=10, homophily=0.78, seed=21)
-    x, _ = sbm_features(g, feat_dim, noise=2.8, seed=22)
-    gn = g.mean_normalized()
-    pg = build_partitioned_graph(gn, nparts, strategy="hybrid", seed=0)
-    wd = prepare_distributed(gn, x, pg)
+    cache = BuildCache()
+    base = _base_spec(epochs, feat_dim).with_overrides(
+        [f"partition.nparts={nparts}"])
     rows = []
     hw = FUGAKU_A64FX
-    vol = pg.stats.per_pair_hybrid.astype(float)
+    stats = None
     for bits in (0, 8, 4, 2):
-        cfg = GCNConfig(model="sage", in_dim=feat_dim, hidden_dim=64,
-                        num_classes=8, num_layers=3, dropout=0.2,
-                        label_prop=True, norm="layer")
-        tr = DistributedTrainer(cfg, DistConfig(nparts=nparts, bits=bits,
-                                                lr=0.01),
-                                wd, mode="vmap", seed=0)
+        spec = base.with_overrides([f"schedule.bits={bits}"])
+        session = build_session(spec, cache=cache)
+        stats = session.comm_stats()
         t0 = time.perf_counter()
-        tr.fit(epochs)
+        session.fit(log_every=0)
         dt = (time.perf_counter() - t0) / epochs
-        acc = tr.evaluate()
+        acc = session.evaluate()
+        vol = stats.per_pair_hybrid.astype(float)
         if bits == 0:
-            wire = pg.stats.hybrid * feat_dim * 4
+            wire = stats.hybrid * feat_dim * 4
             t_comm = comm_time(vol, feat_dim, hw)
         else:
-            wire = wire_bytes(pg.stats.hybrid, feat_dim, bits)
+            wire = wire_bytes(stats.hybrid, feat_dim, bits)
             t_comm = comm_time(vol, feat_dim, hw, bits=bits)
         rows.append({
             "name": f"bits_ablation/{'fp32' if bits == 0 else f'int{bits}'}",
             "us_per_call": round(t_comm * 1e6, 2),
             "derived": (f"eval_acc={acc:.4f},wire_bytes_per_layer={wire},"
-                        f"epoch_s={dt:.3f}"),
+                        f"epoch_s={dt:.3f},spec={spec.content_hash()}"),
         })
-    rows.extend(run_per_stage(epochs=epochs, feat_dim=feat_dim, x=x, gn=gn))
+    rows.extend(run_per_stage(epochs=epochs, feat_dim=feat_dim))
     return rows
 
 
 def run_per_stage(epochs: int = 25, num_groups: int = 2, group_size: int = 2,
-                  feat_dim: int = 32, x=None, gn=None) -> list:
+                  feat_dim: int = 32) -> list:
     """Per-stage bit-width rows on the hierarchical schedule.
 
     Each row trains the same SBM task through a different (intra_bits,
     inter_bits) schedule and reports final accuracy next to the per-stage
     predicted wire bytes, so the accuracy cost of quantizing each wire is
-    attributable to that wire.
+    attributable to that wire. ``int2_inter_fp32_intra`` is the schedule
+    that ships by default now — the fp32 rows pin ``inter_bits=0``
+    explicitly.
     """
-    if gn is None:
-        g = sbm_graph(1200, 8, avg_degree=10, homophily=0.78, seed=21)
-        x, _ = sbm_features(g, feat_dim, noise=2.8, seed=22)
-        gn = g.mean_normalized()
     nparts = num_groups * group_size
-    hpg = build_hierarchical_partitioned_graph(
-        gn, num_groups, group_size, strategy="hybrid", seed=0)
-    wd = prepare_distributed(gn, x, hpg)
+    cache = BuildCache()
+    base = _base_spec(epochs, feat_dim).with_overrides([
+        f"partition.nparts={nparts}", f"partition.groups={num_groups}",
+        f"partition.group_size={group_size}"])
     rows = []
     for name, intra_bits, inter_bits in (
             ("fp32_everywhere", 0, 0),
             ("int2_inter_fp32_intra", 0, 2),
             ("int2_everywhere", 2, 2)):
-        cfg = GCNConfig(model="sage", in_dim=feat_dim, hidden_dim=64,
-                        num_classes=8, num_layers=3, dropout=0.2,
-                        label_prop=True, norm="layer")
-        dc = DistConfig(nparts=nparts, num_groups=num_groups,
-                        group_size=group_size, intra_bits=intra_bits,
-                        inter_bits=inter_bits, lr=0.01)
-        tr = DistributedTrainer(cfg, dc, wd, mode="vmap", seed=0)
+        spec = base.with_overrides([f"schedule.intra_bits={intra_bits}",
+                                    f"schedule.inter_bits={inter_bits}"])
+        session = build_session(spec, cache=cache)
         t0 = time.perf_counter()
-        tr.fit(epochs)
+        session.fit(log_every=0)
         dt = (time.perf_counter() - t0) / epochs
-        acc = tr.evaluate()
-        stage_bytes = dc.schedule().wire_volume_bytes(hpg.stats, feat_dim)
+        acc = session.evaluate()
+        stage_bytes = session.predicted_wire_bytes()
         rows.append({
             "name": f"bits_ablation_stage/{name}",
             "us_per_call": 0.0,
             "derived": (f"eval_acc={acc:.4f},"
                         f"intra_wire_b={stage_bytes['intra']:.0f},"
                         f"inter_wire_b={stage_bytes['inter']:.0f},"
-                        f"epoch_s={dt:.3f}"),
+                        f"epoch_s={dt:.3f},spec={spec.content_hash()}"),
         })
     return rows

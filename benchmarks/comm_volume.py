@@ -12,6 +12,12 @@ per-group aggregation step (paper contribution 2) — and cross-checks the
 computed independently from the realized per-pair plan volumes under an
 ``ExchangeSchedule``'s stage specs.
 
+Every graph/partition/schedule here is constructed declaratively through
+:class:`repro.run.RunSpec` (a :class:`repro.run.BuildCache` shares the
+graph and partitions across the spec variants); the sweep artifact stamps
+each row with its spec content hash so recorded numbers name their exact
+configuration.
+
 CLI:
   python benchmarks/comm_volume.py [--scale N] [--nparts P] [--groups G]
   python benchmarks/comm_volume.py --sweep [--out sweep.json]   # G x W grid
@@ -25,20 +31,30 @@ import sys
 
 import numpy as np
 
-from repro.core import DistConfig
 from repro.core.perf_model import FUGAKU_A64FX, comm_time, hier_epoch_time
-from repro.graph import (
-    build_hierarchical_partitioned_graph,
-    build_partitioned_graph,
-    rmat_graph,
-)
 from repro.quant import wire_bytes
+from repro.run import BuildCache, RunSpec
+
+
+def _spec(scale: int, nparts: int, feat_dim: int, groups: int = 0,
+          strategy: str = "hybrid", **schedule) -> RunSpec:
+    """The benchmark's declarative configuration: a raw (unnormalized)
+    structural R-MAT graph — partition volumes are counted on the bare
+    topology, matching the paper's Table-5 accounting."""
+    sets = ["graph.source=rmat", f"graph.scale={scale}",
+            "graph.edge_factor=8", "graph.seed=1", "graph.norm=none",
+            f"graph.feat_dim={feat_dim}", f"partition.nparts={nparts}",
+            f"partition.groups={groups}", f"partition.strategy={strategy}"]
+    sets += [f"schedule.{k}={json.dumps(v)}" for k, v in schedule.items()]
+    return RunSpec().with_overrides(sets)
 
 
 def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256,
         num_groups: int = 0) -> list:
-    g = rmat_graph(scale, edge_factor=8, seed=1)
-    pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
+    cache = BuildCache()
+    spec = _spec(scale, nparts, feat_dim)
+    g, _ = cache.graph(spec)
+    pg = cache.partition(spec, g)
     s = pg.stats
     hw = FUGAKU_A64FX
     rows = []
@@ -87,12 +103,13 @@ def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256,
             f"num_groups ({num_groups}) must divide nparts ({nparts})")
     group_size = nparts // num_groups if num_groups else 4
     if group_size >= 1 and nparts % group_size == 0:
-        hpg = build_hierarchical_partitioned_graph(
-            g, nparts // group_size, group_size, strategy="hybrid", seed=0)
+        spec_h = _spec(scale, nparts, feat_dim, groups=nparts // group_size)
+        hpg = cache.partition(spec_h, g)
         rows.extend(run_hierarchical(g, nparts, feat_dim,
                                      group_size=group_size, hpg=hpg))
-        rows.extend(run_schedule_check(g, nparts, feat_dim,
-                                       group_size=group_size, pg=pg, hpg=hpg))
+        rows.extend(run_schedule_check(nparts, feat_dim,
+                                       group_size=group_size, pg=pg, hpg=hpg,
+                                       scale=scale, cache=cache, g=g))
     return rows
 
 
@@ -100,16 +117,16 @@ def run_hierarchical(g=None, nparts: int = 16, feat_dim: int = 256,
                      group_size: int = 4, scale: int = 13, hpg=None) -> list:
     """Two-level split on the same graph: intra rows stay on the fast
     fabric; inter rows shrink via group-level dedup/merge."""
-    if g is None and hpg is None:
-        g = rmat_graph(scale, edge_factor=8, seed=1)
     if group_size < 1 or nparts % group_size or nparts < group_size:
         raise ValueError(
             f"nparts ({nparts}) must be a positive multiple of group_size "
             f"({group_size}) so the two-level rows compare to the flat rows")
     num_groups = nparts // group_size
     if hpg is None:
-        hpg = build_hierarchical_partitioned_graph(
-            g, num_groups, group_size, strategy="hybrid", seed=0)
+        spec = _spec(scale, nparts, feat_dim, groups=num_groups)
+        cache = BuildCache()
+        g_, _ = cache.graph(spec) if g is None else (g, None)
+        hpg = cache.partition(spec, g_)
     s = hpg.stats
     hw = FUGAKU_A64FX
 
@@ -158,22 +175,25 @@ def realized_stage_rows(pg, hpg=None) -> dict:
     return out
 
 
-def run_schedule_check(g=None, nparts: int = 16, feat_dim: int = 256,
+def run_schedule_check(nparts: int = 16, feat_dim: int = 256,
                        group_size: int = 4, scale: int = 13,
-                       pg=None, hpg=None) -> list:
+                       pg=None, hpg=None, cache=None, g=None) -> list:
     """Acceptance check: ``CommStats.volume_bytes`` per-stage predictions
     (threaded with each stage's bits/cd) equal the wire bytes computed
     independently from the realized plan volumes.
 
+    The checked schedules are ScheduleSpec sections lowered onto
+    ``DistConfig`` — the identical path every build_session run takes.
     ``pg``/``hpg`` reuse already-built partitions (run() passes its own)."""
-    if g is None and (pg is None or hpg is None):
-        g = rmat_graph(scale, edge_factor=8, seed=1)
     num_groups = nparts // group_size
-    if pg is None:
-        pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
-    if hpg is None:
-        hpg = build_hierarchical_partitioned_graph(
-            g, num_groups, group_size, strategy="hybrid", seed=0)
+    cache = cache or BuildCache()
+    if pg is None or hpg is None:
+        spec0 = _spec(scale, nparts, feat_dim)
+        if g is None:
+            g, _ = cache.graph(spec0)
+        pg = pg or cache.partition(spec0, g)
+        hpg = hpg or cache.partition(
+            _spec(scale, nparts, feat_dim, groups=num_groups), g)
     actual_rows = realized_stage_rows(pg, hpg)
 
     def actual_bytes(rows_count, bits, cd):
@@ -182,15 +202,19 @@ def run_schedule_check(g=None, nparts: int = 16, feat_dim: int = 256,
         return wire_bytes(rows_count, feat_dim, bits) / cd
 
     schedules = [
-        ("flat_int2", DistConfig(nparts=nparts, bits=2), pg.stats),
-        ("flat_int2_cd2", DistConfig(nparts=nparts, bits=2, cd=2), pg.stats),
-        ("hier_mixed", DistConfig(nparts=nparts, bits=0, inter_bits=2,
-                                  inter_cd=2, num_groups=num_groups,
-                                  group_size=group_size), hpg.stats),
+        ("flat_int2", _spec(scale, nparts, feat_dim, bits=2), pg.stats),
+        ("flat_int2_cd2", _spec(scale, nparts, feat_dim, bits=2, cd=2),
+         pg.stats),
+        ("hier_mixed", _spec(scale, nparts, feat_dim, groups=num_groups,
+                             bits=0, inter_bits=2, inter_cd=2), hpg.stats),
+        # The hierarchical *default* schedule: the Int2 inter wire needs no
+        # override anymore (fp32 fast wire, quantized slow wire).
+        ("hier_default", _spec(scale, nparts, feat_dim, groups=num_groups),
+         hpg.stats),
     ]
     rows = []
-    for name, dc, stats in schedules:
-        sched = dc.schedule()
+    for name, spec, stats in schedules:
+        sched = spec.schedule.to_dist_config(spec.partition).schedule()
         predicted = sched.wire_volume_bytes(stats, feat_dim)
         actual = {st.level: actual_bytes(actual_rows[st.level], st.bits, st.cd)
                   for st in sched.stages}
@@ -201,7 +225,8 @@ def run_schedule_check(g=None, nparts: int = 16, feat_dim: int = 256,
             "us_per_call": 0.0,
             "derived": ";".join(
                 f"{k}:pred_b={predicted[k]:.0f}:actual_b={actual[k]:.0f}"
-                for k in predicted) + f";match={match}",
+                for k in predicted) + f";match={match}"
+                + f";spec={spec.content_hash()}",
         })
         if not match:
             raise AssertionError(
@@ -218,21 +243,22 @@ GRID_STRONG = ((8, 8), (16, 8), (16, 16), (32, 16), (64, 16), (128, 16))
 
 def sweep(scale: int = 12, feat_dim: int = 256, grid=GRID_CI) -> list:
     """G x W grid of the two-level split (ROADMAP strong-scaling curve):
-    per-combo stage rows, predicted wire bytes for the default Int2-inter
-    schedule, and the modelled epoch time with/without the two-phase
-    wire/compute overlap — the with-overlap column is the paper's
-    strong-scaling curve shape (epoch time keeps falling while the
+    per-combo stage rows, predicted wire bytes for the (now default)
+    Int2-inter schedule, and the modelled epoch time with/without the
+    two-phase wire/compute overlap — the with-overlap column is the
+    paper's strong-scaling curve shape (epoch time keeps falling while the
     inter wire stays hidden behind local aggregation, then flattens where
-    the exposed remainder takes over)."""
-    g = rmat_graph(scale, edge_factor=8, seed=1)
+    the exposed remainder takes over). Each row records its RunSpec and
+    content hash."""
+    cache = BuildCache()
     out = []
     for num_groups, group_size in grid:
         nparts = num_groups * group_size
-        hpg = build_hierarchical_partitioned_graph(
-            g, num_groups, group_size, strategy="hybrid", seed=0)
+        spec = _spec(scale, nparts, feat_dim, groups=num_groups)
+        g, _ = cache.graph(spec)
+        hpg = cache.partition(spec, g)
         s = hpg.stats
-        dc = DistConfig(nparts=nparts, bits=0, inter_bits=2,
-                        num_groups=num_groups, group_size=group_size)
+        dc = spec.schedule.to_dist_config(spec.partition)
         stage_bytes = dc.schedule().wire_volume_bytes(s, feat_dim)
         model = hier_epoch_time(
             stage_bytes["intra"], stage_bytes["inter"],
@@ -245,6 +271,8 @@ def sweep(scale: int = 12, feat_dim: int = 256, grid=GRID_CI) -> list:
             "num_groups": num_groups,
             "group_size": group_size,
             "nparts": nparts,
+            "spec_hash": spec.content_hash(),
+            "spec": spec.to_dict(),
             "intra_rows": s.intra_rows,
             "inter_rows": s.inter_rows,
             "flat_inter_rows": s.flat_inter_rows,

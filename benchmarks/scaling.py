@@ -62,28 +62,28 @@ def run(scale: int = 13, feat_dim: int = 256, hidden: int = 256,
         })
 
     # Measured wall-clock strong-scaling artifact of the real implementation
-    # (vmap virtual workers on 1 CPU core: constant-work check, not speedup).
-    from repro.core import DistConfig, DistributedTrainer, GCNConfig, prepare_distributed
-    from repro.graph.generators import sbm_features
-    gm = rmat_graph(10, edge_factor=6, seed=4).mean_normalized()
-    gm.labels = np.random.default_rng(0).integers(0, 8, gm.num_nodes).astype(np.int32)
-    gm.train_mask = np.ones(gm.num_nodes, bool)
-    x = np.random.default_rng(1).normal(size=(gm.num_nodes, 32)).astype(np.float32)
+    # (vmap virtual workers on 1 CPU core: constant-work check, not speedup),
+    # driven through the declarative RunSpec like every other run.
+    from repro.run import BuildCache, RunSpec, build_session
+    cache = BuildCache()
+    base = RunSpec().with_overrides([
+        "graph.source=rmat", "graph.scale=10", "graph.edge_factor=6",
+        "graph.seed=4", "graph.feat_dim=32", "graph.features=random",
+        "graph.feat_noise=1.0", "graph.classes=8",
+        "schedule.bits=2", "model.hidden_dim=64", "model.dropout=0.0",
+        "model.label_prop=false"])
     for nparts in (2, 4, 8):
-        pg = build_partitioned_graph(gm, nparts, strategy="hybrid", seed=0)
-        wd = prepare_distributed(gm, x, pg)
-        cfg = GCNConfig(model="sage", in_dim=32, hidden_dim=64, num_classes=8,
-                        num_layers=3, dropout=0.0, label_prop=False)
-        tr = DistributedTrainer(cfg, DistConfig(nparts=nparts, bits=2),
-                                wd, mode="vmap", seed=0)
-        tr.train_epoch()  # compile
+        spec = base.with_overrides([f"partition.nparts={nparts}"])
+        session = build_session(spec, cache=cache)
+        session.train_epoch()  # compile
         t0 = time.perf_counter()
         for _ in range(3):
-            tr.train_epoch()
+            session.train_epoch()
         dt = (time.perf_counter() - t0) / 3
         rows.append({
             "name": f"scaling_measured/P={nparts}/int2_epoch",
             "us_per_call": round(dt * 1e6, 1),
-            "derived": f"halo_rows={pg.stats.hybrid}",
+            "derived": (f"halo_rows={session.comm_stats().hybrid},"
+                        f"spec={spec.content_hash()}"),
         })
     return rows

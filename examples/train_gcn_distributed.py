@@ -5,6 +5,11 @@ aggregation plans -> distributed full-batch GraphSAGE training with Int2
 quantized halo communication + masked label propagation, for a few hundred
 epochs, with FP32 and DistGNN-style cd-5 comparisons.
 
+Each comparison run is one declarative :class:`repro.run.RunSpec` handed
+to ``build_session`` (a shared BuildCache reuses the graph + partition
+across them); print ``spec.to_json()`` for any row to reproduce it with
+``python -m repro.launch.train --gcn --spec file.json``.
+
   PYTHONPATH=src python examples/train_gcn_distributed.py [--epochs 200]
 """
 
@@ -12,13 +17,10 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
-from repro.core import (DistConfig, DistributedTrainer, GCNConfig,
-                        prepare_distributed)
 from repro.core.trainer import _local_aggregate
-from repro.graph import build_partitioned_graph, partition_stats, sbm_graph
-from repro.graph.generators import sbm_features
+from repro.graph import partition_stats
+from repro.run import BuildCache, RunSpec, build_session
 
 
 def time_aggregation(wd, num_layers: int, iters: int = 20) -> dict:
@@ -51,46 +53,45 @@ def main():
                          "scatter-add parity fallback")
     args = ap.parse_args()
 
-    g = sbm_graph(args.nodes, 10, avg_degree=14, homophily=0.8, seed=0)
-    x, _ = sbm_features(g, 64, noise=2.5, seed=1)
-    gn = g.mean_normalized()
-    print(f"graph: {g.num_nodes} nodes / {g.num_edges} edges")
-
-    # 1-2: partition + split into local / pre-aggr / post-aggr graphs (MVC)
-    pg = build_partitioned_graph(gn, args.nparts, strategy="hybrid", seed=0)
+    base = RunSpec().with_overrides([
+        f"graph.nodes={args.nodes}", "graph.classes=10",
+        "graph.avg_degree=14", "graph.homophily=0.8", "graph.seed=0",
+        "graph.feat_dim=64", "graph.feat_noise=2.5",
+        f"partition.nparts={args.nparts}",
+        f"schedule.agg_backend={args.agg_backend}",
+        "model.hidden_dim=256", f"exec.epochs={args.epochs}", "exec.lr=0.01",
+    ])
+    cache = BuildCache()
+    g, _ = cache.graph(base)
+    pg = cache.partition(base, g)
     st = pg.stats
+    print(f"graph: {g.num_nodes} nodes / {g.num_edges} edges")
     print(f"partition: {partition_stats(g, pg.part)}")
     print(f"halo volume rows/layer: vanilla={st.vanilla} pre={st.pre} "
           f"post={st.post} hybrid={st.hybrid} "
           f"(hybrid saves {min(st.pre, st.post) / max(st.hybrid, 1):.2f}x)")
-    wd = prepare_distributed(gn, x, pg)
 
-    agg_us = time_aggregation(wd, num_layers=3)
-    print(f"local aggregation / epoch: coo={agg_us['coo']:.0f}us "
-          f"ell={agg_us['ell']:.0f}us "
-          f"(bucketed-ELL speedup {agg_us['coo'] / agg_us['ell']:.2f}x; "
-          f"training with --agg-backend {args.agg_backend})")
-
-    ab = args.agg_backend
     runs = [
-        ("FP32 sync", DistConfig(nparts=args.nparts, bits=0, lr=0.01,
-                                 agg_backend=ab)),
-        ("Int2 + LP (SuperGCN)", DistConfig(nparts=args.nparts, bits=2,
-                                            lr=0.01, agg_backend=ab)),
-        ("FP32 cd-5 (DistGNN-like)", DistConfig(nparts=args.nparts, bits=0,
-                                                cd=5, lr=0.01,
-                                                agg_backend=ab)),
+        ("FP32 sync", []),
+        ("Int2 + LP (SuperGCN)", ["schedule.bits=2"]),
+        ("FP32 cd-5 (DistGNN-like)", ["schedule.cd=5"]),
     ]
-    for name, dc in runs:
-        cfg = GCNConfig(model="sage", in_dim=64, hidden_dim=256,
-                        num_classes=10, num_layers=3, dropout=0.5,
-                        norm="layer", label_prop=True)
-        tr = DistributedTrainer(cfg, dc, wd, mode="vmap", seed=0)
+    first = True
+    for name, overrides in runs:
+        spec = base.with_overrides(overrides)
+        session = build_session(spec, cache=cache)
+        if first:
+            agg_us = time_aggregation(session.wd, num_layers=3)
+            print(f"local aggregation / epoch: coo={agg_us['coo']:.0f}us "
+                  f"ell={agg_us['ell']:.0f}us "
+                  f"(bucketed-ELL speedup {agg_us['coo'] / agg_us['ell']:.2f}x; "
+                  f"training with --agg-backend {args.agg_backend})")
+            first = False
         t0 = time.time()
-        tr.fit(args.epochs)
-        acc = tr.evaluate()
+        session.fit(log_every=0)
+        acc = session.evaluate()
         print(f"{name:28s} {args.epochs} epochs in {time.time() - t0:6.1f}s "
-              f"-> eval acc {acc:.4f}")
+              f"-> eval acc {acc:.4f}  [{spec.content_hash()}]")
 
 
 if __name__ == "__main__":

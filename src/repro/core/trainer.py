@@ -185,6 +185,12 @@ def train_gcn_single(g: Graph, x: np.ndarray, cfg: M.GCNConfig, epochs: int,
 # --------------------------------------------------------------------------
 
 
+# Hierarchical schedules default the slow inter-group wire to Int2 when the
+# base ``bits`` is fp32 (ROADMAP: the bits_ablation_stage convergence rows
+# justify it). ``inter_bits=0`` opts a config back into the fp32 slow wire.
+HIER_INTER_BITS_DEFAULT = 2
+
+
 class WorkerData(NamedTuple):
     """Per-worker arrays; in the stacked form every field has leading dim P.
 
@@ -230,10 +236,15 @@ class DistConfig:
     node_axis: str = "node"
     group_axis: str = "group"
     # Per-stage overrides for the hierarchical exchange schedule; None means
-    # inherit ``bits`` / ``cd``. E.g. inter_bits=2 + bits=0 is the mixed
-    # "Int2 slow wire, fp32 fast wire" schedule; inter_cd=4 + cd=1 refreshes
-    # the inter-group buffer every 4 epochs while the intra level stays
-    # fresh (stale inter, fresh intra — the paper-faithful configuration).
+    # inherit ``bits`` / ``cd`` — EXCEPT the inter wire, whose default is
+    # Int2 when ``bits`` is fp32 (HIER_INTER_BITS_DEFAULT): the per-stage
+    # convergence evidence (benchmarks/bits_ablation.py
+    # ``bits_ablation_stage/`` rows) shows Int2-inter + fp32-intra matches
+    # fp32-everywhere accuracy with ~13x smaller inter bytes, so the slow
+    # wire ships quantized unless explicitly pinned (inter_bits=0 is the
+    # fp32 slow wire). inter_cd=4 + cd=1 refreshes the inter-group buffer
+    # every 4 epochs while the intra level stays fresh (stale inter, fresh
+    # intra — the paper-faithful configuration).
     intra_bits: Optional[int] = None
     inter_bits: Optional[int] = None
     intra_cd: Optional[int] = None
@@ -275,10 +286,13 @@ class DistConfig:
         """The composable exchange schedule this config describes."""
         if self.hierarchical:
             pick = lambda override, default: default if override is None else override
+            # Quantized slow wire by default: with fp32 base bits the inter
+            # stage still ships Int2 (the bits_ablation_stage evidence).
+            inter_default = self.bits or HIER_INTER_BITS_DEFAULT
             return ExchangeSchedule.hierarchical(
                 self.num_groups, self.group_size,
                 intra_bits=pick(self.intra_bits, self.bits),
-                inter_bits=pick(self.inter_bits, self.bits),
+                inter_bits=pick(self.inter_bits, inter_default),
                 intra_cd=pick(self.intra_cd, self.cd),
                 inter_cd=pick(self.inter_cd, self.cd),
                 node_axis=self.node_axis, group_axis=self.group_axis,
@@ -288,10 +302,14 @@ class DistConfig:
                                      overlap=self.overlap)
 
     def sync_fp32(self) -> "DistConfig":
-        """This config with every stage forced to fresh fp32 (eval wire)."""
+        """This config with every stage forced to fresh fp32 (eval wire).
+
+        The hierarchical inter stage needs an explicit ``inter_bits=0``
+        pin — leaving it None would fall back to the Int2 default."""
         return dataclasses.replace(
             self, bits=0, cd=1,
-            intra_bits=None, inter_bits=None, intra_cd=None, inter_cd=None)
+            intra_bits=None, inter_bits=0 if self.hierarchical else None,
+            intra_cd=None, inter_cd=None)
 
     @property
     def psum_axes(self):

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_arch
 from repro.launch.hlo_stats import parse_collectives
 from repro.launch.input_specs import input_specs
-from repro.launch.mesh import make_production_mesh, make_worker_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models.transformer import forward_train, serve_step, train_step
 from repro.sharding.compat import mesh_context
 
@@ -248,77 +248,64 @@ def _finish(rec: dict, t0: float, save: bool) -> dict:
     return rec
 
 
-def run_gcn_dryrun(multi_pod: bool, save: bool = True, groups: int = 0,
-                   bits: int = 2, cd: int = 1,
-                   agg_backend: str = "ell", overlap=None,
-                   scale: int = 13, chips: int = 0,
+def gcn_base_spec(nparts: int, scale: int = 13) -> "RunSpec":
+    """The dry-run's base RunSpec: a structural R-MAT stand-in graph
+    (zero features/labels — host preprocessing at laptop scale) lowered
+    through the production shard_map trainer with the paper's Table-2
+    GraphSAGE shape and an Int2 wire."""
+    from repro.run import RunSpec
+    return RunSpec().with_overrides([
+        "graph.source=rmat", f"graph.scale={scale}", "graph.edge_factor=8",
+        "graph.seed=7", "graph.feat_dim=128", "graph.classes=40",
+        f"partition.nparts={nparts}", "partition.seed=0",
+        "schedule.bits=2", "model.hidden_dim=256", "model.num_layers=3",
+        "exec.mode=shard_map", "exec.seed=0",
+    ])
+
+
+def run_gcn_dryrun(spec, mesh_name: str = None, save: bool = True,
                    assert_overlap: bool = False) -> dict:
-    """Dry-run the paper's distributed GCN trainer on the production mesh,
-    dispatched through its ExchangeSchedule.
+    """Dry-run the paper's distributed GCN trainer on the production mesh —
+    ``build_session(spec).lower()`` plus the HLO analyses.
 
-    ``groups=0`` is 1-D graph-parallel over all chips (flat schedule);
-    ``groups=G`` lowers the two-level (group, node) shard_map trainer on a
-    G x (chips/G) mesh. ``bits``/``cd``/``overlap`` thread straight into
-    the schedule, so e.g. ``--groups 16 --cd 4`` dry-runs delayed-comm on
-    the hierarchical exchange. The record carries the schedule description,
-    the CommStats per-stage wire-byte predictions next to the collective
-    bytes parsed from the partitioned HLO, and the collective scheduling
-    order parsed from the *lowered* StableHLO — the overlap proof: with
-    the two-phase LayerProgram the wire collectives precede the bucketed
-    aggregation's dot ops in program order.
+    ``partition.groups=0`` is 1-D graph-parallel over all chips (flat
+    schedule); ``groups=G`` lowers the two-level (group, node) shard_map
+    trainer on a G x (nparts/G) mesh. The schedule section threads
+    straight through, so e.g. ``--groups 16 --cd 4`` dry-runs delayed-comm
+    on the hierarchical exchange. The record carries the spec (and its
+    content hash — the artifact names its exact configuration), the
+    schedule description, the CommStats per-stage wire-byte predictions
+    next to the collective bytes parsed from the partitioned HLO, and the
+    collective scheduling order parsed from the *lowered* StableHLO — the
+    overlap proof: with the two-phase LayerProgram the wire collectives
+    precede the bucketed aggregation's dot ops in program order.
 
-    ``chips``/``scale`` shrink the run for the fast CI check (default is
-    the full 256/512-chip mesh on rmat-13); ``assert_overlap`` flips the
-    record to error status when the parsed order shows the wire is NOT
+    ``--chips``/``--scale`` shrink the run for the fast CI check (default
+    is the full 256/512-chip mesh on rmat-13); ``assert_overlap`` flips
+    the record to error status when the parsed order shows the wire is NOT
     issued before the aggregation compute.
     """
-    import numpy as np
-    from repro.core import DistConfig, DistributedTrainer, GCNConfig
-    from repro.core.trainer import prepare_distributed
-    from repro.graph import (build_hierarchical_partitioned_graph,
-                             build_partitioned_graph, rmat_graph)
     from repro.launch.hlo_stats import collective_order
-    from repro.launch.mesh import make_hier_worker_mesh
+    from repro.run import build_session
 
-    nparts = chips or (512 if multi_pod else 256)
-    mesh_name = (f"{nparts}chips" if chips
-                 else ("2x16x16" if multi_pod else "16x16"))
-    shape_name = f"rmat{scale}-fullbatch" + (f"-g{groups}" if groups else "")
+    groups = spec.partition.groups
+    nparts = spec.partition.nparts
+    gs = spec.graph
+    size = gs.scale if gs.source == "rmat" else gs.nodes
+    shape_name = (f"{gs.source}{size}-fullbatch"
+                  + (f"-g{groups}" if groups else ""))
     rec = {"arch": "supergcn-graphsage", "shape": shape_name,
-           "mesh": mesh_name, "chips": nparts, "status": "ok"}
+           "mesh": mesh_name or f"{nparts}chips", "chips": nparts,
+           "status": "ok", "spec": spec.to_dict(),
+           "spec_hash": spec.content_hash()}
     t0 = time.time()
     try:
-        # Structural stand-in graph (host preprocessing at laptop scale).
-        g = rmat_graph(scale, edge_factor=8, seed=7).mean_normalized()
-        g.labels = np.zeros(g.num_nodes, np.int32)
-        g.train_mask = np.ones(g.num_nodes, bool)
-        feat = 128
-        x = np.zeros((g.num_nodes, feat), np.float32)
-        if groups:
-            if nparts % groups:
-                raise ValueError(f"--groups {groups} must divide {nparts}")
-            group_size = nparts // groups
-            gmesh = make_hier_worker_mesh(groups, group_size)
-            dc = DistConfig(nparts=nparts, bits=bits, cd=cd,
-                            num_groups=groups, group_size=group_size,
-                            agg_backend=agg_backend, overlap=overlap)
-            pg = build_hierarchical_partitioned_graph(
-                g, groups, group_size, strategy="hybrid", seed=0)
-        else:
-            gmesh = make_worker_mesh(nparts)
-            dc = DistConfig(nparts=nparts, bits=bits, cd=cd,
-                            agg_backend=agg_backend, overlap=overlap)
-            pg = build_partitioned_graph(g, nparts, strategy="hybrid", seed=0)
-        wd = prepare_distributed(g, x, pg)
-        cfg = GCNConfig(model="sage", in_dim=feat, hidden_dim=256,
-                        num_classes=40, num_layers=3, quant_bits=bits)
-        trainer = DistributedTrainer(cfg, dc, wd, mode="shard_map",
-                                     mesh=gmesh, seed=0)
-        rec["agg_backend"] = dc.agg_backend
-        rec["schedule"] = trainer.schedule.describe()
-        rec["predicted_wire_bytes"] = trainer.schedule.wire_volume_bytes(
-            pg.stats, feat)
-        lowered = trainer.lower_step()
+        session = build_session(spec)
+        pg = session.pg
+        rec["agg_backend"] = spec.schedule.agg_backend
+        rec["schedule"] = session.schedule.describe()
+        rec["predicted_wire_bytes"] = session.predicted_wire_bytes()
+        lowered = session.lower()
         # Overlap evidence lives in the lowered (trace-order) module; the
         # compiled text below is scheduler-normalized (see hlo_stats).
         order = collective_order(lowered.as_text())
@@ -361,24 +348,34 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--gcn", action="store_true",
                     help="dry-run the SuperGCN distributed trainer")
-    ap.add_argument("--groups", type=int, default=0,
+    from repro.run import add_spec_args, spec_from_args
+    add_spec_args(ap)
+    # Legacy --gcn flags: aliases onto the RunSpec (default=None = "not
+    # passed"; the base spec supplies the dry-run defaults, incl. bits=2).
+    ap.add_argument("--groups", type=int, default=None,
                     help="with --gcn: num_groups for the hierarchical "
-                         "(group, node) trainer (0 = flat 1-D)")
-    ap.add_argument("--bits", type=int, default=2, choices=(0, 2, 4, 8),
-                    help="with --gcn: wire format for the exchange schedule")
-    ap.add_argument("--cd", type=int, default=1,
-                    help="with --gcn: delayed-comm refresh period")
-    ap.add_argument("--agg-backend", default="ell", choices=("coo", "ell"),
+                         "(group, node) trainer (0 = flat 1-D); alias for "
+                         "--set partition.groups=G")
+    ap.add_argument("--bits", type=int, default=None, choices=(0, 2, 4, 8),
+                    help="with --gcn: wire format for the exchange "
+                         "schedule (base spec: 2); alias for "
+                         "--set schedule.bits=B")
+    ap.add_argument("--cd", type=int, default=None,
+                    help="with --gcn: delayed-comm refresh period; alias "
+                         "for --set schedule.cd=N")
+    ap.add_argument("--agg-backend", default=None, choices=("coo", "ell"),
                     help="with --gcn: aggregation realization (bucketed "
-                         "blocked-ELL kernel dispatch vs COO scatter-add)")
+                         "blocked-ELL kernel dispatch vs COO scatter-add); "
+                         "alias for --set schedule.agg_backend=B")
     ap.add_argument("--overlap", dest="overlap", action="store_true",
                     default=None,
                     help="with --gcn: force two-phase wire/compute overlap "
                          "(default: on for hierarchical, off for flat)")
     ap.add_argument("--no-overlap", dest="overlap", action="store_false",
                     help="with --gcn: force the sequential parity schedule")
-    ap.add_argument("--scale", type=int, default=13,
-                    help="with --gcn: R-MAT scale of the stand-in graph")
+    ap.add_argument("--scale", type=int, default=None,
+                    help="with --gcn: R-MAT scale of the stand-in graph "
+                         "(base spec: 13); alias for --set graph.scale=N")
     ap.add_argument("--chips", type=int, default=0,
                     help="with --gcn: worker count (0 = full production "
                          "mesh; small values give a fast CI-sized dry-run)")
@@ -390,11 +387,15 @@ def main():
     args = ap.parse_args()
 
     if args.gcn:
-        rec = run_gcn_dryrun(args.multi_pod, groups=args.groups,
-                             bits=args.bits, cd=args.cd,
-                             agg_backend=args.agg_backend,
-                             overlap=args.overlap, scale=args.scale,
-                             chips=args.chips,
+        nparts = args.chips or (512 if args.multi_pod else 256)
+        spec = spec_from_args(
+            args, base=gcn_base_spec(nparts, scale=args.scale or 13))
+        # Label the production mesh only when the resolved spec still
+        # targets it (a --spec/--set override of nparts wins over --chips).
+        mesh_name = (("2x16x16" if args.multi_pod else "16x16")
+                     if not args.chips and spec.partition.nparts == nparts
+                     else None)
+        rec = run_gcn_dryrun(spec, mesh_name=mesh_name,
                              assert_overlap=args.assert_overlap)
         raise SystemExit(0 if rec["status"] == "ok" else 1)
     if args.all:

@@ -2,15 +2,20 @@
 
 Two modes, mirroring the two systems in this repo:
 
-* ``--gcn``: the paper's distributed full-batch GCN training (partition ->
-  MVC pre/post halo plans -> shard_map/vmap full-batch epochs), with the
-  paper's knobs (--strategy, --bits, --lp, --cd).
+* ``--gcn``: the paper's distributed full-batch GCN training, driven by a
+  declarative :class:`repro.run.RunSpec` (``--spec file.json`` +
+  ``--set section.field=value``). The historical explicit flags
+  (``--nparts``, ``--bits``, ``--groups``, per-stage ``--intra-bits`` /
+  ``--inter-bits`` / ``--intra-cd`` / ``--inter-cd``, ...) keep working as
+  deprecation aliases onto the same spec paths.
 * ``--arch``: transformer LM training on synthetic tokens for any assigned
   architecture (smoke-scale by default; production shapes are exercised by
   the dry-run, not executed on CPU).
 
 Examples:
   python -m repro.launch.train --gcn --nparts 8 --bits 2 --epochs 30
+  python -m repro.launch.train --gcn --spec specs/hier_int2_inter.json \
+      --set exec.epochs=100 --set schedule.inter_cd=4
   python -m repro.launch.train --arch tinyllama-1.1b --smoke --steps 5
 """
 
@@ -21,65 +26,26 @@ import time
 
 
 def run_gcn(args):
-    import numpy as np
-    from repro.core import (DistConfig, GCNConfig, DistributedTrainer,
-                            prepare_distributed)
-    from repro.graph import (build_hierarchical_partitioned_graph,
-                             build_partitioned_graph, sbm_graph)
-    from repro.graph.generators import sbm_features
+    from repro.run import build_session, spec_from_args
 
-    g = sbm_graph(args.nodes, args.classes, avg_degree=args.degree,
-                  homophily=0.8, seed=args.seed)
-    x, _ = sbm_features(g, args.feat_dim, noise=2.5, seed=args.seed + 1)
-    gn = g.mean_normalized()
+    spec = spec_from_args(args)
+    print(f"spec: {spec.describe()}")
+    session = build_session(spec)
+    g, s = session.graph, session.comm_stats()
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
-          f"{args.classes} classes")
-    groups = args.groups
-    if not groups and (args.inter_bits is not None or args.inter_cd is not None):
-        raise SystemExit("--inter-bits/--inter-cd are per-stage overrides of "
-                         "the hierarchical schedule; pass --groups as well")
-    if groups:
-        if args.nparts % groups:
-            raise SystemExit(f"--groups {groups} must divide --nparts")
-        group_size = args.nparts // groups
-        pg = build_hierarchical_partitioned_graph(
-            gn, groups, group_size, strategy=args.strategy, seed=args.seed)
-        dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd,
-                        lr=args.lr, num_groups=groups, group_size=group_size,
-                        inter_bits=args.inter_bits, inter_cd=args.inter_cd,
-                        agg_backend=args.agg_backend, overlap=args.overlap)
-    else:
-        pg = build_partitioned_graph(gn, args.nparts, strategy=args.strategy,
-                                     seed=args.seed)
-        dc = DistConfig(nparts=args.nparts, bits=args.bits, cd=args.cd,
-                        lr=args.lr, agg_backend=args.agg_backend,
-                        overlap=args.overlap)
-    s = pg.stats
+          f"{spec.graph.classes} classes")
     print(f"partition comm volumes: vanilla={s.vanilla} pre={s.pre} "
           f"post={s.post} hybrid={s.hybrid} (selected={s.selected})")
-    print(f"exchange schedule: {dc.schedule().describe()}")
-    wd = prepare_distributed(gn, x, pg)
-    cfg = GCNConfig(model=args.model, in_dim=args.feat_dim, hidden_dim=args.hidden,
-                    num_classes=args.classes, num_layers=3, dropout=0.5,
-                    label_prop=args.lp, quant_bits=args.bits)
-    mode = args.mode
-    mesh = None
-    if mode == "shard_map":
-        if groups:
-            from repro.launch.mesh import make_hier_worker_mesh
-            mesh = make_hier_worker_mesh(groups, args.nparts // groups)
-        else:
-            from repro.launch.mesh import make_worker_mesh
-            mesh = make_worker_mesh(args.nparts)
-    tr = DistributedTrainer(cfg, dc, wd, mode=mode, mesh=mesh, seed=args.seed)
+    print(f"exchange schedule: {session.schedule.describe()}")
     t0 = time.time()
-    hist = tr.fit(args.epochs, log_every=max(args.epochs // 10, 1))
+    hist = session.fit()
     dt = time.time() - t0
     for h in hist:
         print(f"epoch {h['epoch']:4d} loss {h['loss']:.4f} "
               f"train_acc {h['train_acc']:.4f} eval_acc {h.get('eval_acc', 0):.4f}")
-    print(f"trained {args.epochs} epochs in {dt:.1f}s "
-          f"({dt / args.epochs * 1e3:.1f} ms/epoch)")
+    epochs = spec.exec.epochs
+    print(f"trained {epochs} epochs in {dt:.1f}s "
+          f"({dt / max(epochs, 1) * 1e3:.1f} ms/epoch)")
 
 
 def run_lm(args):
@@ -89,12 +55,13 @@ def run_lm(args):
     from repro.models import init_params, train_step
     from repro.optim import adamw_init
 
+    seed = args.seed if args.seed is not None else 0
     cfg = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
-    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
     opt = adamw_init(params)
     step = jax.jit(lambda p, o, b: train_step(p, o, b, cfg,
                                               num_microbatches=args.microbatches))
-    key = jax.random.PRNGKey(args.seed + 1)
+    key = jax.random.PRNGKey(seed + 1)
     b, s = args.batch, args.seq_len
     for i in range(args.steps):
         key, sub = jax.random.split(key)
@@ -109,50 +76,84 @@ def run_lm(args):
 
 
 def main():
+    from repro.run import add_spec_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--gcn", action="store_true")
     ap.add_argument("--arch", type=str, default=None)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    # gcn options
-    ap.add_argument("--nparts", type=int, default=8)
-    ap.add_argument("--nodes", type=int, default=4096)
-    ap.add_argument("--classes", type=int, default=16)
-    ap.add_argument("--degree", type=float, default=16.0)
-    ap.add_argument("--feat-dim", type=int, default=64)
-    ap.add_argument("--hidden", type=int, default=256)
-    ap.add_argument("--model", default="sage", choices=["gcn", "sage", "gin"])
-    ap.add_argument("--strategy", default="hybrid",
-                    choices=["hybrid", "pre", "post", "vanilla"])
-    ap.add_argument("--bits", type=int, default=0, choices=[0, 2, 4, 8])
-    ap.add_argument("--lp", action="store_true", default=True)
-    ap.add_argument("--no-lp", dest="lp", action="store_false")
-    ap.add_argument("--cd", type=int, default=1,
-                    help="delayed-comm period (DistGNN baseline; 1=sync)")
-    ap.add_argument("--agg-backend", default="ell", choices=["coo", "ell"],
-                    help="aggregation realization: degree-bucketed "
-                         "blocked-ELL kernel dispatch (default) or the "
-                         "COO scatter-add parity fallback")
-    ap.add_argument("--groups", type=int, default=0,
+    ap.add_argument("--seed", type=int, default=None)
+    # The declarative entry point (the canonical way to configure --gcn).
+    add_spec_args(ap)
+    # Legacy gcn flags: deprecation aliases onto RunSpec paths (see
+    # repro.run.cli.LEGACY_ALIASES). default=None = "not passed"; only
+    # user-supplied values override the spec.
+    ap.add_argument("--nparts", type=int, default=None,
+                    help="alias for --set partition.nparts=N")
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="alias for --set graph.nodes=N")
+    ap.add_argument("--classes", type=int, default=None,
+                    help="alias for --set graph.classes=N")
+    ap.add_argument("--degree", type=float, default=None,
+                    help="alias for --set graph.avg_degree=D")
+    ap.add_argument("--feat-dim", type=int, default=None,
+                    help="alias for --set graph.feat_dim=F")
+    ap.add_argument("--hidden", type=int, default=None,
+                    help="alias for --set model.hidden_dim=H")
+    ap.add_argument("--model", default=None,
+                    choices=["gcn", "sage", "gin", "gat"],
+                    help="alias for --set model.model=NAME")
+    ap.add_argument("--strategy", default=None,
+                    choices=["hybrid", "pre", "post", "vanilla"],
+                    help="alias for --set partition.strategy=NAME")
+    ap.add_argument("--bits", type=int, default=None, choices=[0, 2, 4, 8],
+                    help="alias for --set schedule.bits=B")
+    ap.add_argument("--lp", dest="lp", action="store_true", default=None,
+                    help="alias for --set model.label_prop=true")
+    ap.add_argument("--no-lp", dest="lp", action="store_false",
+                    help="alias for --set model.label_prop=false")
+    ap.add_argument("--cd", type=int, default=None,
+                    help="delayed-comm period (DistGNN baseline; 1=sync); "
+                         "alias for --set schedule.cd=N")
+    ap.add_argument("--agg-backend", default=None, choices=["coo", "ell"],
+                    help="aggregation realization (bucketed blocked-ELL "
+                         "kernel dispatch vs COO scatter-add parity "
+                         "fallback); alias for --set schedule.agg_backend=B")
+    ap.add_argument("--groups", type=int, default=None,
                     help="num_groups for the hierarchical two-level "
-                         "exchange (0 = flat; group_size = nparts/groups)")
+                         "exchange (0 = flat; group_size auto-derives as "
+                         "nparts/groups); alias for --set partition.groups=G")
+    ap.add_argument("--intra-bits", type=int, default=None,
+                    choices=[0, 2, 4, 8],
+                    help="override the intra-group stage's wire bits; "
+                         "alias for --set schedule.intra_bits=B")
     ap.add_argument("--inter-bits", type=int, default=None,
                     choices=[0, 2, 4, 8],
                     help="override the inter-group stage's wire bits "
-                         "(e.g. Int2 slow wire + fp32 fast wire)")
+                         "(hierarchical default: Int2; 0 pins fp32); "
+                         "alias for --set schedule.inter_bits=B")
+    ap.add_argument("--intra-cd", type=int, default=None,
+                    help="override the intra-group stage's refresh period; "
+                         "alias for --set schedule.intra_cd=N")
     ap.add_argument("--inter-cd", type=int, default=None,
                     help="override the inter-group stage's refresh period "
-                         "(stale inter, fresh intra)")
+                         "(stale inter, fresh intra); alias for "
+                         "--set schedule.inter_cd=N")
     ap.add_argument("--overlap", dest="overlap", action="store_true",
                     default=None,
                     help="issue the exchange wire before the local "
                          "aggregation (two-phase LayerProgram; default: on "
-                         "for hierarchical schedules, off for flat)")
+                         "for hierarchical schedules, off for flat); "
+                         "alias for --set schedule.overlap=true")
     ap.add_argument("--no-overlap", dest="overlap", action="store_false",
-                    help="force the sequential parity schedule")
-    ap.add_argument("--epochs", type=int, default=50)
-    ap.add_argument("--lr", type=float, default=0.01)
-    ap.add_argument("--mode", default="vmap", choices=["vmap", "shard_map"])
+                    help="force the sequential parity schedule; "
+                         "alias for --set schedule.overlap=false")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="alias for --set exec.epochs=N")
+    ap.add_argument("--lr", type=float, default=None,
+                    help="alias for --set exec.lr=LR")
+    ap.add_argument("--mode", default=None, choices=["vmap", "shard_map"],
+                    help="alias for --set exec.mode=MODE")
     # lm options
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--batch", type=int, default=4)

@@ -1,0 +1,49 @@
+# RunSpec: the declarative, serializable experiment API. One spec object
+# drives every launcher, benchmark and example (see spec.py / session.py).
+from repro.run.spec import (
+    FEATURE_SOURCES,
+    GRAPH_SOURCES,
+    ExecSpec,
+    GraphSpec,
+    ModelSpec,
+    PartitionSpec,
+    RunSpec,
+    ScheduleSpec,
+    SpecError,
+)
+from repro.run.session import (
+    BuildCache,
+    Session,
+    build_graph,
+    build_mesh,
+    build_partition,
+    build_session,
+)
+from repro.run.cli import (
+    LEGACY_ALIASES,
+    add_spec_args,
+    legacy_overrides,
+    spec_from_args,
+)
+
+__all__ = [
+    "FEATURE_SOURCES",
+    "GRAPH_SOURCES",
+    "ExecSpec",
+    "GraphSpec",
+    "ModelSpec",
+    "PartitionSpec",
+    "RunSpec",
+    "ScheduleSpec",
+    "SpecError",
+    "BuildCache",
+    "Session",
+    "build_graph",
+    "build_mesh",
+    "build_partition",
+    "build_session",
+    "LEGACY_ALIASES",
+    "add_spec_args",
+    "legacy_overrides",
+    "spec_from_args",
+]

@@ -1,0 +1,188 @@
+"""build_session: lower a :class:`~repro.run.spec.RunSpec` onto the live
+training stack.
+
+The pipeline every launcher/benchmark/example used to hand-assemble —
+
+  graph source -> features -> normalization -> (flat | hierarchical)
+  partition -> ``prepare_distributed`` -> mesh -> ``DistributedTrainer``
+
+— runs here once, stage by stage, and returns a :class:`Session` exposing
+the operations the drivers actually perform: ``fit`` / ``train_epoch`` /
+``evaluate`` (training), ``lower`` (the dry-run hook), ``comm_stats`` /
+``predicted_wire_bytes`` (accounting). The staged helpers
+(:func:`build_graph`, :func:`build_partition`) are public so analysis-only
+drivers (comm-volume sweeps) reuse the identical construction without
+paying for a trainer, and :class:`BuildCache` lets benchmark grids share
+the expensive graph/partition stages across spec variants that only differ
+downstream (the cache keys on the relevant sub-spec hashes, so a hit is
+always semantically identical to a rebuild).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import repro.run.sources as sources  # populates the registries on import
+from repro.run.spec import GRAPH_SOURCES, FEATURE_SOURCES, RunSpec, SpecError
+
+
+def build_graph(spec: RunSpec) -> Tuple[Any, np.ndarray]:
+    """(normalized Graph, features [N, F]) for the spec's graph section.
+
+    Features are synthesized on the *raw* graph (labels drive them, not
+    edge weights); normalization attaches the aggregation edge weights
+    before partitioning so pre-aggregation applies source-side weights —
+    the invariant ``prepare_distributed`` documents.
+    """
+    gs = spec.graph
+    g = GRAPH_SOURCES.get(gs.source)(gs)
+    x = FEATURE_SOURCES.get(sources.resolve_features(gs))(g, gs)
+    if gs.norm == "mean":
+        g = g.mean_normalized()
+    elif gs.norm == "gcn":
+        g = g.gcn_normalized()
+    return g, x
+
+
+def build_partition(spec: RunSpec, g) -> Any:
+    """Partition the (already normalized) graph per the spec: a flat
+    ``PartitionedGraph`` or a two-level ``HierPartitionedGraph``."""
+    from repro.graph import (build_hierarchical_partitioned_graph,
+                             build_partitioned_graph)
+    ps = spec.partition
+    if ps.hierarchical:
+        return build_hierarchical_partitioned_graph(
+            g, ps.groups, ps.resolved_group_size(),
+            strategy=ps.strategy, seed=ps.seed)
+    return build_partitioned_graph(g, ps.nparts, strategy=ps.strategy,
+                                   seed=ps.seed)
+
+
+def build_mesh(spec: RunSpec):
+    """The worker mesh for shard_map execution (None under vmap)."""
+    if spec.exec.mode != "shard_map":
+        return None
+    from repro.launch.mesh import make_hier_worker_mesh, make_worker_mesh
+    ps = spec.partition
+    if ps.hierarchical:
+        return make_hier_worker_mesh(ps.groups, ps.resolved_group_size())
+    return make_worker_mesh(ps.nparts)
+
+
+@dataclass
+class BuildCache:
+    """Shares the graph/partition stages across sessions whose specs agree
+    on those stages (benchmark grids sweeping only schedule/model knobs).
+    Keys are content hashes of the contributing sub-specs, so a hit never
+    crosses configurations."""
+
+    graphs: Dict[str, Tuple[Any, np.ndarray]] = field(default_factory=dict)
+    partitions: Dict[str, Any] = field(default_factory=dict)
+
+    @staticmethod
+    def _graph_key(spec: RunSpec) -> str:
+        return json.dumps(spec.graph.to_dict(), sort_keys=True)
+
+    @staticmethod
+    def _part_key(spec: RunSpec) -> str:
+        return json.dumps([spec.graph.to_dict(), spec.partition.to_dict()],
+                          sort_keys=True)
+
+    def graph(self, spec: RunSpec) -> Tuple[Any, np.ndarray]:
+        key = self._graph_key(spec)
+        if key not in self.graphs:
+            self.graphs[key] = build_graph(spec)
+        return self.graphs[key]
+
+    def partition(self, spec: RunSpec, g) -> Any:
+        key = self._part_key(spec)
+        if key not in self.partitions:
+            self.partitions[key] = build_partition(spec, g)
+        return self.partitions[key]
+
+
+class Session:
+    """A spec lowered onto the live stack: graph, partition, worker data,
+    mesh and trainer, plus the driver-facing operations."""
+
+    def __init__(self, spec: RunSpec, g, x, pg, wd, mesh, trainer):
+        self.spec = spec
+        self.graph = g
+        self.x = x
+        self.pg = pg
+        self.wd = wd
+        self.mesh = mesh
+        self.trainer = trainer
+
+    # -- training ----------------------------------------------------------
+
+    def fit(self, epochs: Optional[int] = None,
+            log_every: Optional[int] = None) -> List[Dict]:
+        """Train for ``epochs`` (default: the spec's) and return history.
+
+        ``log_every`` falls back to the spec's, whose 0 means "auto"
+        (~10 eval points); pass an explicit 0 to skip evals entirely
+        (pure-throughput benchmark loops)."""
+        e = self.spec.exec
+        n = e.epochs if epochs is None else epochs
+        le = e.log_every if log_every is None else log_every
+        if not le and log_every is None:
+            le = max(n // 10, 1)
+        return self.trainer.fit(n, log_every=le)
+
+    def train_epoch(self) -> Dict[str, float]:
+        return self.trainer.train_epoch()
+
+    def evaluate(self) -> float:
+        return self.trainer.evaluate()
+
+    # -- dry-run -----------------------------------------------------------
+
+    def lower(self, key=None):
+        """Lower (without executing) one training step — the dry-run hook."""
+        return self.trainer.lower_step(key)
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def schedule(self):
+        return self.trainer.schedule
+
+    def comm_stats(self):
+        """The partition's ``CommStats`` (per-strategy/per-stage volumes)."""
+        return self.pg.stats
+
+    def predicted_wire_bytes(self, feat_dim: Optional[int] = None
+                             ) -> Dict[str, float]:
+        """Per-stage predicted wire bytes per epoch under the schedule."""
+        f = self.spec.graph.feat_dim if feat_dim is None else feat_dim
+        return self.schedule.wire_volume_bytes(self.pg.stats, f)
+
+    def describe(self) -> str:
+        return self.spec.describe()
+
+
+def build_session(spec: RunSpec, cache: Optional[BuildCache] = None
+                  ) -> Session:
+    """Lower ``spec`` end to end and return the live :class:`Session`."""
+    from repro.core import DistributedTrainer
+    from repro.core.trainer import prepare_distributed
+
+    spec.validate()
+    if cache is not None:
+        g, x = cache.graph(spec)
+        pg = cache.partition(spec, g)
+    else:
+        g, x = build_graph(spec)
+        pg = build_partition(spec, g)
+    wd = prepare_distributed(g, x, pg)
+    dc = spec.schedule.to_dist_config(spec.partition, lr=spec.exec.lr)
+    cfg = spec.model.to_gcn_config(spec.graph, spec.schedule)
+    mesh = build_mesh(spec)
+    trainer = DistributedTrainer(cfg, dc, wd, mode=spec.exec.mode,
+                                 mesh=mesh, seed=spec.exec.seed)
+    return Session(spec, g, x, pg, wd, mesh, trainer)

@@ -121,7 +121,8 @@ class TestDelayedCommComposition:
         gn, x, hpg, pgf = toy_setup
         cfg = _cfg()
         tr_h = DistributedTrainer(
-            cfg, DistConfig(nparts=P, cd=3, num_groups=G, group_size=W),
+            cfg, DistConfig(nparts=P, cd=3, num_groups=G, group_size=W,
+                            inter_bits=0),  # fp32 slow wire: compare to flat
             prepare_distributed(gn, x, hpg), seed=0)
         tr_f = DistributedTrainer(
             cfg, DistConfig(nparts=P, cd=3),

@@ -253,7 +253,9 @@ class TestHierTraining:
         cfg = self._cfg()
         wd_h = prepare_distributed(gn, x, hpg)
         wd_f = prepare_distributed(gn, x, pgf)
-        dc_h = DistConfig(nparts=P, bits=0, lr=0.01,
+        # inter_bits=0 pins the fp32 slow wire (the hierarchical default is
+        # Int2-inter) so the comparison against the flat fp32 trainer holds.
+        dc_h = DistConfig(nparts=P, bits=0, inter_bits=0, lr=0.01,
                           num_groups=G, group_size=W)
         dc_f = DistConfig(nparts=P, bits=0, lr=0.01)
         tr_h = DistributedTrainer(cfg, dc_h, wd_h, mode="vmap", seed=0)
@@ -281,7 +283,8 @@ class TestHierTraining:
         params = init_params(jax.random.PRNGKey(0), cfg)
         wd_h = prepare_distributed(gn, x, hpg)
         wd_f = prepare_distributed(gn, x, pgf)
-        dc_h = DistConfig(nparts=P, bits=0, num_groups=G, group_size=W)
+        dc_h = DistConfig(nparts=P, bits=0, inter_bits=0,
+                          num_groups=G, group_size=W)
         dc_f = DistConfig(nparts=P, bits=0)
 
         def worker_h(p, w):

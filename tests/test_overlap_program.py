@@ -158,8 +158,10 @@ class TestOverlapStructure:
         issue/finalize phases."""
         from repro.core.trainer import _local_aggregate
         wd = setup[2]
+        # inter_bits=0: the keyless issue(h, None) below needs an fp32 wire
+        # (the hierarchical default is now a quantized inter stage).
         sched = DistConfig(nparts=P, num_groups=G, group_size=W,
-                           overlap=True).schedule()
+                           inter_bits=0, overlap=True).schedule()
 
         def via_run_layer(h, wd1):
             local = _local_aggregate(h, wd1, "ell")
