@@ -1,7 +1,7 @@
 # Tier-1 verification (same command as ROADMAP.md).
 PY ?= python
 
-.PHONY: check check-fast check-overlap spec-matrix bench-comm bench-comm-sweep bench-agg
+.PHONY: check check-fast check-overlap audit spec-matrix bench-comm bench-comm-sweep bench-agg
 
 check:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -12,10 +12,20 @@ check-fast:
 
 # CI-sized hierarchical dry-run asserting the two-phase overlap: the
 # lowered HLO must issue the inter-stage wire collectives before the
-# bucketed-aggregation dots (exits non-zero otherwise).
+# bucketed-aggregation dots (exits non-zero otherwise). Served by the
+# auditor's overlap-order rule (repro.analysis) since PR 6.
 check-overlap:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.dryrun \
 		--gcn --groups 2 --scale 10 --chips 8 --overlap --assert-overlap
+
+# The static-analysis gate: every HLO rule (overlap-order, wire-dtype,
+# replica-groups, predicted-bytes, retrace-guard) plus the Python AST lint
+# over every canonical spec in specs/. Exit 0 clean, 1 warnings (with
+# --fail-on warning), 2 errors. AUDIT_OUT overrides the findings artifact.
+AUDIT_OUT ?= audit_findings.json
+audit:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.run.matrix specs/ \
+		--audit --out $(AUDIT_OUT)
 
 # Every canonical RunSpec in specs/ must stay buildable: each is driven
 # through build_session(spec).lower() (flat/fp32, hier/Int2-inter, cd>1,

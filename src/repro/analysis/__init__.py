@@ -1,0 +1,55 @@
+# Static-analysis gate over lowered/compiled programs and the specs that
+# produced them: an IR model of the StableHLO collectives (ir.py), a rule
+# registry with findings (rules.py), the paper-invariant HLO rules
+# (hlo_rules.py), a Python AST lint for hot-path hazards (ast_lint.py),
+# and the audit driver (audit.py / python -m repro.analysis.audit).
+from repro.analysis.ir import (
+    COLLECTIVE_OPS,
+    COMPUTE_OPS,
+    HloModule,
+    HloOp,
+    ReplicaGroups,
+    parse_stablehlo,
+)
+from repro.analysis.rules import (
+    RULES,
+    AuditContext,
+    Finding,
+    Rule,
+    Severity,
+    register_rule,
+    run_rules,
+    worst_severity,
+)
+from repro.analysis import hlo_rules  # noqa: F401  (registers the HLO rules)
+from repro.analysis.ast_lint import lint_paths, lint_source
+
+
+def __getattr__(name):
+    # Lazy: importing audit here would shadow `python -m
+    # repro.analysis.audit` (runpy re-executes the module it finds in
+    # sys.modules) and audit pulls in the whole run/ stack.
+    if name == "audit_spec":
+        from repro.analysis.audit import audit_spec
+        return audit_spec
+    raise AttributeError(name)
+
+__all__ = [
+    "COLLECTIVE_OPS",
+    "COMPUTE_OPS",
+    "HloModule",
+    "HloOp",
+    "ReplicaGroups",
+    "parse_stablehlo",
+    "RULES",
+    "AuditContext",
+    "Finding",
+    "Rule",
+    "Severity",
+    "register_rule",
+    "run_rules",
+    "worst_severity",
+    "lint_paths",
+    "lint_source",
+    "audit_spec",
+]

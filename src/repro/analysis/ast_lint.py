@@ -1,0 +1,140 @@
+"""Python AST lint for hot-path hazards in ``src/repro/``.
+
+Two hazard classes, both invisible to the HLO rules because they act at
+trace/dispatch time rather than in the lowered program:
+
+``debug-stmt`` (everywhere): leftover ``jax.debug.print`` /
+``jax.debug.breakpoint`` / ``jax.debug.callback``, ``breakpoint()`` and
+``pdb.set_trace()`` — debug scaffolding that inserts host callbacks into
+compiled code (or hangs a batch run at a prompt).
+
+``host-sync`` (hot files only): ``.item()`` and ``np.asarray`` /
+``np.array`` calls inside functions that manipulate traced values
+(functions referencing ``jnp``/``lax``) in ``core/trainer.py`` or
+``core/exchange.py``. On a traced value these force a device->host
+transfer per call — per step, per stage, in the paths the paper's
+overlap numbers depend on. Host-side plan building in the same files
+(pure ``numpy`` functions, no ``jnp``) is legitimate and not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List, Sequence, Tuple
+
+from repro.analysis.rules import Finding, Severity
+
+# Files whose traced functions are the per-step hot path.
+HOT_FILES: Tuple[str, ...] = ("core/trainer.py", "core/exchange.py")
+# numpy entry points that force a host sync when handed a traced value.
+_HOST_SYNC_FUNCS = ("asarray", "array")
+_NUMPY_ALIASES = ("np", "numpy", "onp")
+# A function that references these names manipulates traced values.
+_TRACED_MARKERS = ("jnp", "lax")
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute chain ('jax.debug.print'), else ''."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _uses_traced_values(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id in _TRACED_MARKERS:
+            return True
+        if isinstance(node, ast.Attribute):
+            if _attr_chain(node) in ("jax.numpy", "jax.lax"):
+                return True
+    return False
+
+
+def _debug_findings(tree: ast.AST, path: str) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        chain = ""
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) and node.func.id == "breakpoint":
+                chain = "breakpoint"
+            else:
+                chain = _attr_chain(node.func)
+        if not chain:
+            continue
+        if (chain.startswith("jax.debug.") or chain == "breakpoint"
+                or chain.endswith("pdb.set_trace")):
+            findings.append(Finding(
+                rule="debug-stmt", severity=Severity.ERROR,
+                message=f"leftover debug statement: {chain}(...)",
+                location=f"{path}:{node.lineno}",
+                fix_hint="remove before merging — jax.debug.* inserts host "
+                         "callbacks into the compiled step; breakpoint/"
+                         "set_trace hangs batch runs"))
+    return findings
+
+
+def _host_sync_findings(tree: ast.AST, path: str) -> List[Finding]:
+    findings: List[Finding] = []
+    seen = set()
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not _uses_traced_values(fn):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            label = ""
+            if (isinstance(func, ast.Attribute) and func.attr == "item"
+                    and not node.args and not node.keywords):
+                label = ".item()"
+            elif isinstance(func, ast.Attribute):
+                chain = _attr_chain(func)
+                root, _, attr = chain.rpartition(".")
+                if root in _NUMPY_ALIASES and attr in _HOST_SYNC_FUNCS:
+                    label = f"{chain}(...)"
+            if not label or node.lineno in seen:
+                continue
+            seen.add(node.lineno)
+            findings.append(Finding(
+                rule="host-sync", severity=Severity.ERROR,
+                message=f"host sync {label} inside a traced hot-path "
+                        f"function ({fn.name})",
+                location=f"{path}:{node.lineno}",
+                fix_hint="on a traced value this blocks on a device->host "
+                         "transfer every step; use jnp.* inside traced "
+                         "code and keep numpy to host-side plan building"))
+    return findings
+
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    """Lint one module's source. ``path`` decides hot-file status."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="debug-stmt", severity=Severity.ERROR,
+                        message=f"cannot parse: {e.msg}",
+                        location=f"{path}:{e.lineno or 0}")]
+    findings = _debug_findings(tree, path)
+    norm = path.replace("\\", "/")
+    if any(norm.endswith(h) for h in HOT_FILES):
+        findings.extend(_host_sync_findings(tree, path))
+    return sorted(findings, key=lambda f: f.location)
+
+
+def lint_paths(paths: Sequence[str] | Iterable[str]) -> List[Finding]:
+    """Lint every ``.py`` under the given files/directories."""
+    findings: List[Finding] = []
+    for p in paths:
+        root = Path(p)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            findings.extend(lint_source(f.read_text(), str(f)))
+    return findings

@@ -1,0 +1,286 @@
+"""The paper-invariant HLO rules.
+
+Every headline property of the reproduction is an invariant of the
+lowered/compiled program, not of the Python that traced it:
+
+  ``overlap-order``    overlap-scheduled specs must issue the wire
+                       collectives before the aggregation dots (PR 4's
+                       two-phase LayerProgram — trace order is what lets
+                       XLA hide the wire);
+  ``wire-dtype``       a quantized stage must ship an integer payload —
+                       a full-width float all-to-all on its replica
+                       groups means something dequantized *before* the
+                       wire (the regression that silently erases §7.3);
+  ``replica-groups``   every collective's group must match the spec's
+                       G x (W/G) topology (wrong groups = wrong
+                       communication structure, the CGSys failure mode);
+  ``predicted-bytes``  per-device all-to-all bytes parsed from the
+                       compiled module must match the bytes the session
+                       predicts from its device plans (model-vs-lowered
+                       drift detector);
+  ``retrace-guard``    N training steps must hit exactly one compiled
+                       executable (a leaked host value in the step
+                       signature recompiles every epoch).
+
+Collective-level rules apply to ``shard_map`` specs only — under vmap the
+named-axis collectives lower to single-device data movement, so there is
+no wire in the module to audit (``Rule.applies`` reports them skipped).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.rules import (
+    AuditContext,
+    Finding,
+    Rule,
+    Severity,
+    register_rule,
+)
+
+
+def _wire_group_size(schedule, stage) -> int:
+    """The replica-group size of a stage's all-to-all: nparts (flat),
+    group_size (intra), num_groups (inter) — exactly ``topo.wire_chunks``."""
+    return schedule.topo(stage).wire_chunks
+
+
+@register_rule
+class OverlapOrderRule(Rule):
+    """Wire collectives precede aggregation dots when the schedule says
+    overlap (migrated from the ``check-overlap`` dry-run assert)."""
+
+    id = "overlap-order"
+    description = ("overlap-scheduled specs issue the (inter) wire "
+                   "collectives before the aggregation compute in the "
+                   "lowered module")
+
+    def applies(self, ctx: AuditContext) -> bool:
+        return ctx.shard_map
+
+    def check(self, ctx: AuditContext) -> List[Finding]:
+        sched = ctx.schedule
+        order = ctx.module.collective_order()
+        want_overlap = any(s.overlap for s in sched.stages)
+        findings: List[Finding] = []
+        if want_overlap:
+            ok = order["wire_before_compute"] and (
+                order["inter_wire_before_compute"]
+                or not sched.is_hierarchical)
+            if not ok:
+                findings.append(self.finding(
+                    "schedule requests overlap but the lowered module does "
+                    "not issue the wire collectives before the aggregation "
+                    f"compute (first_wire={order['first_wire']}, "
+                    f"first_inter_wire={order['first_inter_wire']}, "
+                    f"first_compute={order['first_compute']})",
+                    location=f"lowered:{(order['first_compute'] or {}).get('line', 0)}",
+                    fix_hint="the trainer must sequence LayerProgram.issue "
+                             "-> _local_aggregate -> finalize; check that "
+                             "issue launches every overlap=True stage's "
+                             "pipeline (inter first) before any dot enters "
+                             "the trace",
+                    order={k: order[k] for k in
+                           ("wire_before_compute",
+                            "inter_wire_before_compute")}))
+        elif order["wire_before_compute"]:
+            findings.append(self.finding(
+                "schedule is sequential (no stage overlaps) but the wire "
+                "is issued before the aggregation compute — the trace does "
+                "not match the declared schedule",
+                severity=Severity.WARNING,
+                location=f"lowered:{(order['first_wire'] or {}).get('line', 0)}",
+                fix_hint="overlap=False stages must run their pipeline in "
+                         "LayerProgram.finalize (the sequential parity "
+                         "trace)"))
+        return findings
+
+
+@register_rule
+class WireDtypeRule(Rule):
+    """No full-width float all-to-all on a quantized stage's replica
+    groups — catches silent dequantize-before-wire regressions."""
+
+    id = "wire-dtype"
+    description = ("specs with Int2/4/8 stages must ship integer wire "
+                   "payloads; full-width float all-to-alls on those "
+                   "replica groups are dequant-before-wire regressions")
+
+    def applies(self, ctx: AuditContext) -> bool:
+        return ctx.shard_map and any(s.bits for s in ctx.schedule.stages)
+
+    def check(self, ctx: AuditContext) -> List[Finding]:
+        sched = ctx.schedule
+        findings: List[Finding] = []
+        fp32_sizes = {_wire_group_size(sched, s) for s in sched.stages
+                      if not s.bits}
+        a2as = ctx.module.collectives("all-to-all")
+        for stage in sched.stages:
+            if not stage.bits:
+                continue
+            size = _wire_group_size(sched, stage)
+            stage_ops = [o for o in a2as if o.group_size == size]
+            # Payload ops carry full feature rows; the fp32 (zero, scale)
+            # quant params ride along as trailing-dim-1 columns.
+            payloads = [o for o in stage_ops
+                        if (o.trailing_dim or 0) > 1]
+            float_payloads = [o for o in payloads if o.is_float]
+            int_payloads = [o for o in payloads if not o.is_float]
+            ambiguous = size in fp32_sizes
+            for op in float_payloads:
+                if ambiguous:
+                    # An fp32 stage shares this group size (e.g. G == W),
+                    # so a float payload here may be its legitimate wire.
+                    findings.append(self.finding(
+                        f"float all-to-all {op.result_dtype}"
+                        f"{list(op.result_shape)} on the Int{stage.bits} "
+                        f"{stage.level} stage's group size {size}, which "
+                        "an fp32 stage shares — cannot attribute",
+                        severity=Severity.INFO,
+                        location=f"lowered:{op.line}"))
+                else:
+                    findings.append(self.finding(
+                        f"Int{stage.bits} {stage.level} stage ships a "
+                        f"full-width float payload: {op.result_dtype}"
+                        f"{list(op.result_shape)} all-to-all on replica "
+                        f"groups of size {size}",
+                        location=f"lowered:{op.line}",
+                        fix_hint="the wire must carry the quantized "
+                                 "payload (int32 holders today, i4/i2 once "
+                                 "XLA packs sub-byte); dequantize only "
+                                 "after the all_to_all "
+                                 "(exchange._quantized_wire)",
+                        dtype=op.result_dtype,
+                        shape=list(op.result_shape)))
+            if not int_payloads:
+                findings.append(self.finding(
+                    f"Int{stage.bits} {stage.level} stage lowered no "
+                    f"integer all-to-all payload on replica groups of "
+                    f"size {size} — the quantized wire vanished",
+                    fix_hint="check that stage_issue routes bits>0 through "
+                             "quantized_exchange",
+                    location=ctx.spec_name))
+        return findings
+
+
+@register_rule
+class ReplicaGroupsRule(Rule):
+    """Collective replica groups must realize the spec's topology."""
+
+    id = "replica-groups"
+    description = ("every collective's replica-group size must be one of "
+                   "the spec's axis sizes (W, G, or G*W for hierarchical; "
+                   "P for flat), and the groups must cover all workers")
+
+    def applies(self, ctx: AuditContext) -> bool:
+        return ctx.shard_map
+
+    def check(self, ctx: AuditContext) -> List[Finding]:
+        p = ctx.spec.partition
+        nparts = p.nparts
+        if p.hierarchical:
+            allowed = {p.groups, p.resolved_group_size(), nparts}
+            topo = f"{p.groups}x{p.resolved_group_size()}"
+        else:
+            allowed = {nparts}
+            topo = f"flat {nparts}"
+        findings: List[Finding] = []
+        for op in ctx.module.collectives():
+            rg = op.replica_groups
+            if rg is None:
+                continue
+            if rg.group_size not in allowed:
+                findings.append(self.finding(
+                    f"{op.op} over replica groups of size {rg.group_size} "
+                    f"does not match the spec topology ({topo}: allowed "
+                    f"sizes {sorted(allowed)})",
+                    location=f"lowered:{op.line}",
+                    fix_hint="a collective spanning the wrong axis moves "
+                             "the wrong bytes; check the schedule's "
+                             "StageTopo axis wiring",
+                    group_size=rg.group_size,
+                    allowed=sorted(allowed)))
+            elif rg.total != nparts:
+                findings.append(self.finding(
+                    f"{op.op} replica groups cover {rg.total} devices; "
+                    f"the spec runs {nparts} workers",
+                    location=f"lowered:{op.line}",
+                    total=rg.total, nparts=nparts))
+        return findings
+
+
+@register_rule
+class PredictedBytesRule(Rule):
+    """Per-device all-to-all bytes in the compiled module must match the
+    session's plan-derived prediction (model-vs-lowered drift)."""
+
+    id = "predicted-bytes"
+    description = ("all-to-all operand bytes parsed from the compiled "
+                   "module match Session.predicted_hlo_wire_bytes within "
+                   "tolerance")
+    tolerance = 0.10
+
+    def applies(self, ctx: AuditContext) -> bool:
+        return ctx.shard_map
+
+    def check(self, ctx: AuditContext) -> List[Finding]:
+        from repro.analysis.ir import compiled_collectives
+        predicted = ctx.session.predicted_hlo_wire_bytes()
+        expect = predicted["total"]
+        stats = compiled_collectives(ctx.compiled_text)
+        parsed = stats.get("all-to-all", {}).get("operand_bytes", 0.0)
+        if expect <= 0:
+            return []
+        rel = abs(parsed - expect) / expect
+        if rel <= self.tolerance:
+            return []
+        return [self.finding(
+            f"compiled module moves {parsed:.0f} all-to-all bytes per "
+            f"device per step; the session's device plans predict "
+            f"{expect:.0f} ({rel:.1%} off, tolerance {self.tolerance:.0%})",
+            location=ctx.spec_name,
+            fix_hint="either the exchange lowering changed (extra/missing "
+                     "wire, dequant-before-wire quadruples payload bytes) "
+                     "or predicted_hlo_wire_bytes' model went stale — "
+                     "reconcile before trusting either number",
+            parsed_bytes=parsed, predicted=predicted,
+            paper_model_bytes=ctx.session.predicted_wire_bytes())]
+
+
+@register_rule
+class RetraceGuardRule(Rule):
+    """N training epochs hit exactly one compiled step executable."""
+
+    id = "retrace-guard"
+    description = ("Session.fit must reuse one compiled executable across "
+                   "epochs — a leaked host value in the step signature "
+                   "recompiles every epoch")
+
+    def check(self, ctx: AuditContext) -> List[Finding]:
+        n = max(2, min(ctx.steps, ctx.spec.exec.epochs or 2))
+        session = ctx.session
+        session.fit(epochs=n, log_every=0)
+        size = session.step_cache_size()
+        if size is None:
+            return [self.finding(
+                "cannot count compiled executables on this JAX version "
+                "(no _cache_size on the jitted step)",
+                severity=Severity.INFO, location="runtime")]
+        if size == 1:
+            return []
+        return [self.finding(
+            f"{n} training epochs compiled {size} step executables "
+            "(expected exactly 1)",
+            location="runtime",
+            fix_hint="something in the step's arguments changes identity "
+                     "per epoch — pass epoch counters as device arrays "
+                     "(jnp.asarray), keep cache pytree structure stable, "
+                     "and keep static config hashable and constant",
+            epochs=n, executables=size)]
+
+
+def stage_wire_summary(ctx: AuditContext) -> Dict[str, int]:
+    """Per-stage expected all-to-all group sizes (debug/driver helper)."""
+    sched = ctx.schedule
+    return {s.level: _wire_group_size(sched, s) for s in sched.stages}

@@ -1,0 +1,243 @@
+"""A structured IR over lowered StableHLO text.
+
+The auditor's rules reason about *programs*, not regex hits: every
+collective / aggregation-compute op in a lowered module becomes an
+:class:`HloOp` carrying its kind, result dtype/shape, replica groups and
+program order, collected into an :class:`HloModule` walker. This
+generalizes the single-purpose parsing in ``launch/hlo_stats.py`` —
+``collective_order`` is now a thin projection of this model — while the
+byte-accounting walk over *compiled* (post-SPMD) HLO stays in
+``hlo_stats.parse_collectives`` (optimized HLO has a different grammar;
+:func:`compiled_collectives` wraps it for rule use).
+
+Only the *lowered* module (``lowered.as_text()``) preserves trace order;
+compiled text is scheduler-normalized. Rules that reason about program
+order must parse lowered text, rules about realized bytes parse compiled
+text.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+# StableHLO op name -> canonical collective kind (the hlo_stats vocabulary).
+COLLECTIVE_OPS: Dict[str, str] = {
+    "all_to_all": "all-to-all",
+    "reduce_scatter": "reduce-scatter",
+    "all_gather": "all-gather",
+    "all_reduce": "all-reduce",
+    "collective_permute": "collective-permute",
+}
+# Default compute vocabulary: the degree-bucketed segment-aggregate einsum
+# lowers to dot_general (gather/scatter also appear in the exchange's
+# assemble/recv paths, so they cannot discriminate aggregation compute).
+COMPUTE_OPS: Tuple[str, ...] = ("dot_general", "dot", "convolution")
+
+# Wire starters: the ops that begin a stage's pipeline (the grouped inter
+# stage opens with its per-group psum_scatter = reduce-scatter; a2a stages
+# open with the all_to_all itself).
+WIRE_START = ("all-to-all", "reduce-scatter")
+
+_OP_TOKEN_RE = re.compile(r'"?stablehlo\.([a-z_0-9]+)"?')
+# tensor<2x28x16xi32>, tensor<f32>, tensor<2x4xi64>; MLIR integer dtypes
+# include sub-byte i2/i4 (and unsigned ui4) once XLA emits them.
+_TENSOR_RE = re.compile(r"tensor<(?:([0-9]+(?:x[0-9]+)*)x)?"
+                        r"([a-z]+[0-9]+)>")
+_REPLICA_RE = re.compile(r"replica_groups\s*=\s*dense<.*?>\s*:\s*"
+                         r"tensor<([0-9]+)x([0-9]+)xi64>")
+_SIG_RE = re.compile(r":\s*\(([^)]*)\)\s*->\s*(.+?)\s*$")
+
+# Bit widths of MLIR element types (floats, signless/unsigned ints).
+_DTYPE_BITS: Dict[str, int] = {
+    "i1": 1, "i2": 2, "i4": 4, "i8": 8, "i16": 16, "i32": 32, "i64": 64,
+    "ui2": 2, "ui4": 4, "ui8": 8, "ui16": 16, "ui32": 32, "ui64": 64,
+    "si2": 2, "si4": 4, "si8": 8, "si16": 16, "si32": 32, "si64": 64,
+    "f16": 16, "bf16": 16, "f32": 32, "f64": 64,
+}
+
+_FLOAT_DTYPES = ("f16", "bf16", "f32", "f64")
+
+
+@dataclass(frozen=True)
+class ReplicaGroups:
+    """The ``dense<...> : tensor<AxBxi64>`` attribute: A groups of B ids."""
+
+    num_groups: int
+    group_size: int
+
+    @property
+    def total(self) -> int:
+        return self.num_groups * self.group_size
+
+
+@dataclass(frozen=True)
+class HloOp:
+    """One parsed op in program (trace) order."""
+
+    op: str                       # canonical kind ("all-to-all", "dot_general")
+    klass: str                    # "collective" | "compute"
+    line: int                     # 0-based line in the module text
+    index: int                    # position among parsed ops
+    result_dtype: Optional[str] = None
+    result_shape: Tuple[int, ...] = ()
+    result_bytes: int = 0         # summed over tuple results
+    operand_bytes: int = 0
+    replica_groups: Optional[ReplicaGroups] = None
+    text: str = ""                # the (stripped) source line
+
+    @property
+    def group_size(self) -> Optional[int]:
+        return self.replica_groups.group_size if self.replica_groups else None
+
+    @property
+    def trailing_dim(self) -> Optional[int]:
+        return self.result_shape[-1] if self.result_shape else None
+
+    @property
+    def is_float(self) -> bool:
+        return self.result_dtype in _FLOAT_DTYPES
+
+
+def _tensors_bytes(sig: str) -> Tuple[int, Optional[str], Tuple[int, ...]]:
+    """(total bytes, first dtype, first shape) of a type list."""
+    total = 0
+    first_dtype: Optional[str] = None
+    first_shape: Tuple[int, ...] = ()
+    for dims, dtype in _TENSOR_RE.findall(sig):
+        n = 1
+        shape: Tuple[int, ...] = ()
+        if dims:
+            shape = tuple(int(d) for d in dims.split("x"))
+            for d in shape:
+                n *= d
+        bits = _DTYPE_BITS.get(dtype)
+        if bits is None:
+            continue
+        total += (n * bits + 7) // 8
+        if first_dtype is None:
+            first_dtype = dtype
+            first_shape = shape
+    return total, first_dtype, first_shape
+
+
+@dataclass
+class HloModule:
+    """Parsed lowered module: ops in program order plus walker helpers."""
+
+    ops: List[HloOp] = field(default_factory=list)
+    num_lines: int = 0
+
+    def walk(self, pred: Optional[Callable[[HloOp], bool]] = None
+             ) -> List[HloOp]:
+        return [o for o in self.ops if pred is None or pred(o)]
+
+    def collectives(self, kind: Optional[str] = None) -> List[HloOp]:
+        return self.walk(lambda o: o.klass == "collective"
+                         and (kind is None or o.op == kind))
+
+    def computes(self) -> List[HloOp]:
+        return self.walk(lambda o: o.klass == "compute")
+
+    def first(self, pred: Callable[[HloOp], bool]) -> Optional[HloOp]:
+        return next((o for o in self.ops if pred(o)), None)
+
+    # -- the hlo_stats.collective_order projection -------------------------
+
+    def collective_order(self) -> dict:
+        """Program-order overlap evidence in the exact dict shape
+        ``launch.hlo_stats.collective_order`` has always returned (that
+        function now delegates here)."""
+        events = [{"line": o.line, "op": o.op, "class": o.klass,
+                   "group_size": o.group_size if o.klass == "collective"
+                   else None}
+                  for o in self.ops]
+
+        first_wire = self.first(lambda o: o.op in WIRE_START)
+        first_inter = self.first(lambda o: o.op == "reduce-scatter")
+        first_compute = self.first(lambda o: o.klass == "compute")
+
+        def precedes(a: Optional[HloOp], b: Optional[HloOp]) -> bool:
+            return a is not None and b is not None and a.line < b.line
+
+        def as_event(o: Optional[HloOp]):
+            return None if o is None else {
+                "line": o.line, "op": o.op, "class": o.klass,
+                "group_size": o.group_size if o.klass == "collective"
+                else None}
+
+        return {
+            "events": events,
+            "first_wire": as_event(first_wire),
+            "first_inter_wire": as_event(first_inter),
+            "first_compute": as_event(first_compute),
+            "wire_before_compute": precedes(first_wire, first_compute),
+            "inter_wire_before_compute": precedes(first_inter, first_compute),
+        }
+
+
+def parse_stablehlo(text: str,
+                    compute_ops: Sequence[str] = ("dot_general",)
+                    ) -> HloModule:
+    """Parse a lowered StableHLO module into an :class:`HloModule`.
+
+    ``compute_ops`` names the StableHLO ops classified as aggregation
+    compute (default matches ``collective_order``'s historical contract:
+    ``dot_general`` only).
+
+    Region-bodied collectives (``all_reduce`` / ``reduce_scatter`` carry
+    their reduction computation in a ``({ ... })`` region) print their
+    type signature on the region's closing ``})`` line; the parser scans
+    forward for it. Reduction regions hold only elementwise ops, so the
+    first closing ``})`` is the op's own.
+    """
+    lines = text.splitlines()
+    ops: List[HloOp] = []
+    compute_set = set(compute_ops)
+    for i, line in enumerate(lines):
+        m = _OP_TOKEN_RE.search(line)
+        if not m:
+            continue
+        name = m.group(1)
+        if name in COLLECTIVE_OPS:
+            kind, klass = COLLECTIVE_OPS[name], "collective"
+        elif name in compute_set:
+            kind, klass = name, "compute"
+        else:
+            continue
+        rg = _REPLICA_RE.search(line)
+        sig_line = line
+        if _SIG_RE.search(line) is None and line.rstrip().endswith("({"):
+            for j in range(i + 1, min(i + 64, len(lines))):
+                if lines[j].lstrip().startswith("})"):
+                    sig_line = lines[j]
+                    break
+        if rg is None and sig_line is not line:
+            # Generic MLIR prints region-op attributes after the region,
+            # on the closing "})" line, instead of in the op line's
+            # <{...}> properties dict.
+            rg = _REPLICA_RE.search(sig_line)
+        groups = (ReplicaGroups(int(rg.group(1)), int(rg.group(2)))
+                  if rg else None)
+        sig = _SIG_RE.search(sig_line)
+        if sig:
+            operand_bytes, _, _ = _tensors_bytes(sig.group(1))
+            result_bytes, dtype, shape = _tensors_bytes(sig.group(2))
+        else:
+            operand_bytes = result_bytes = 0
+            dtype, shape = None, ()
+        ops.append(HloOp(op=kind, klass=klass, line=i, index=len(ops),
+                         result_dtype=dtype, result_shape=shape,
+                         result_bytes=result_bytes,
+                         operand_bytes=operand_bytes,
+                         replica_groups=groups, text=line.strip()))
+    return HloModule(ops=ops, num_lines=len(lines))
+
+
+def compiled_collectives(compiled_text: str) -> Dict[str, Dict[str, float]]:
+    """Loop-aware per-device collective byte stats of a *compiled* module
+    (thin wrapper over ``hlo_stats.parse_collectives`` so rules depend on
+    the analysis package only)."""
+    from repro.launch.hlo_stats import parse_collectives
+    return parse_collectives(compiled_text)

@@ -1,0 +1,203 @@
+"""Rule registry + findings for the spec/HLO auditor.
+
+A :class:`Rule` checks one invariant of a lowered/compiled program against
+the :class:`~repro.run.spec.RunSpec` that produced it, and reports
+:class:`Finding`\\ s (id, severity, message, location, fix hint). Rules
+register into :data:`RULES` via :func:`register_rule` and run through
+:func:`run_rules` over an :class:`AuditContext` — a lazy view of one
+spec's build artifacts (session, lowered text, parsed IR, compiled text)
+that only pays for what the selected rules actually request, so e.g. an
+``overlap-order``-only audit never compiles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.utils.registry import Registry
+
+
+class Severity:
+    """Finding severities, ordered. ``exit_code`` maps the worst finding
+    of an audit onto the driver's exit-code contract (clean/info = 0)."""
+
+    INFO = "info"
+    WARNING = "warning"
+    ERROR = "error"
+    ORDER = (INFO, WARNING, ERROR)
+
+    @classmethod
+    def rank(cls, severity: str) -> int:
+        return cls.ORDER.index(severity)
+
+
+def worst_severity(findings: Sequence["Finding"]) -> Optional[str]:
+    if not findings:
+        return None
+    return max((f.severity for f in findings), key=Severity.rank)
+
+
+@dataclass
+class Finding:
+    """One rule violation (or informational note) at a location."""
+
+    rule: str
+    severity: str
+    message: str
+    location: str = ""        # "lowered:617", "src/.../trainer.py:123", ...
+    fix_hint: str = ""
+    data: Dict[str, Any] = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        d = {"rule": self.rule, "severity": self.severity,
+             "message": self.message, "location": self.location}
+        if self.fix_hint:
+            d["fix_hint"] = self.fix_hint
+        if self.data:
+            d["data"] = self.data
+        return d
+
+    def __str__(self) -> str:
+        loc = f" @ {self.location}" if self.location else ""
+        return f"[{self.severity.upper()}] {self.rule}{loc}: {self.message}"
+
+
+class AuditContext:
+    """Lazy build artifacts for one spec under audit.
+
+    ``session`` / ``lowered_text`` / ``module`` / ``compiled_text`` build
+    on first access and memoize; rules declare what they touch simply by
+    touching it. ``steps`` bounds execution-based rules (retrace-guard).
+    """
+
+    def __init__(self, spec, spec_name: str = "", steps: int = 3):
+        self.spec = spec
+        self.spec_name = spec_name or spec.content_hash()
+        self.steps = steps
+        self._session = None
+        self._schedule = None
+        self._lowered = None
+        self._lowered_text: Optional[str] = None
+        self._module = None
+        self._compiled_text: Optional[str] = None
+
+    @property
+    def session(self):
+        if self._session is None:
+            from repro.run.session import build_session
+            self._session = build_session(self.spec)
+        return self._session
+
+    @property
+    def schedule(self):
+        """The resolved ExchangeSchedule. Derived from the spec alone
+        (topology + stage knobs, no graph build), so structural rules can
+        audit golden fixture text without ever building a session."""
+        if self._session is not None:
+            return self._session.schedule
+        if self._schedule is None:
+            dc = self.spec.schedule.to_dist_config(self.spec.partition,
+                                                   lr=self.spec.exec.lr)
+            self._schedule = dc.schedule()
+        return self._schedule
+
+    @property
+    def lowered(self):
+        if self._lowered is None:
+            self._lowered = self.session.lower()
+        return self._lowered
+
+    @property
+    def lowered_text(self) -> str:
+        if self._lowered_text is None:
+            self._lowered_text = self.lowered.as_text()
+        return self._lowered_text
+
+    @property
+    def module(self):
+        """The parsed lowered-StableHLO IR (:class:`~.ir.HloModule`)."""
+        if self._module is None:
+            from repro.analysis.ir import parse_stablehlo
+            self._module = parse_stablehlo(self.lowered_text)
+        return self._module
+
+    @property
+    def compiled_text(self) -> str:
+        if self._compiled_text is None:
+            self._compiled_text = self.lowered.compile().as_text()
+        return self._compiled_text
+
+    @property
+    def shard_map(self) -> bool:
+        """Collective-level rules only see collectives under shard_map:
+        vmap's named-axis collectives lower to data movement on one
+        device, so there is no wire in the module to audit."""
+        return self.spec.exec.mode == "shard_map"
+
+
+class Rule:
+    """One audit rule. Subclasses set the class attributes and implement
+    :meth:`check`; :meth:`applies` gates on spec properties (a rule that
+    does not apply is recorded as skipped, not passed)."""
+
+    id: str = ""
+    description: str = ""
+    severity: str = Severity.ERROR
+
+    def applies(self, ctx: AuditContext) -> bool:
+        return True
+
+    def check(self, ctx: AuditContext) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, message: str, location: str = "",
+                fix_hint: str = "", severity: Optional[str] = None,
+                **data) -> Finding:
+        return Finding(rule=self.id, severity=severity or self.severity,
+                       message=message, location=location,
+                       fix_hint=fix_hint, data=data)
+
+
+RULES: Registry = Registry("audit rule")
+
+
+def register_rule(cls):
+    """Class decorator: instantiate and register an audit rule by id."""
+    if not cls.id:
+        raise ValueError(f"rule {cls.__name__} needs a non-empty id")
+    RULES.add(cls.id, cls())
+    return cls
+
+
+def run_rules(ctx: AuditContext,
+              rule_ids: Optional[Sequence[str]] = None
+              ) -> Dict[str, Any]:
+    """Run the selected rules (default: all registered) over ``ctx``.
+
+    Returns ``{"findings": [...], "ran": [...], "skipped": [...],
+    "rule_errors": [...]}``. A rule that raises is reported as an ERROR
+    finding against the rule itself (an auditor crash must not pass
+    silently) and listed in ``rule_errors``.
+    """
+    ids = list(rule_ids) if rule_ids is not None else list(RULES)
+    findings: List[Finding] = []
+    ran: List[str] = []
+    skipped: List[str] = []
+    rule_errors: List[str] = []
+    for rid in ids:
+        rule = RULES.get(rid)
+        try:
+            if not rule.applies(ctx):
+                skipped.append(rid)
+                continue
+            findings.extend(rule.check(ctx))
+            ran.append(rid)
+        except Exception as e:  # noqa: BLE001 — auditor must not crash the run
+            rule_errors.append(rid)
+            findings.append(Finding(
+                rule=rid, severity=Severity.ERROR,
+                message=f"rule crashed: {type(e).__name__}: {e}",
+                location=ctx.spec_name))
+    return {"findings": findings, "ran": ran, "skipped": skipped,
+            "rule_errors": rule_errors}

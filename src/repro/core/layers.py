@@ -10,7 +10,7 @@ aggregation.
 
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

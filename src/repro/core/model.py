@@ -13,7 +13,7 @@ propagation (§6.1) are part of the model flow:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 import jax

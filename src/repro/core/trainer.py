@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as M
-from repro.core.exchange import ExchangeSchedule, StageSpec
+from repro.core.exchange import ExchangeSchedule
 from repro.core.halo import (
     DeviceHaloPlan,
     DeviceHierPlan,
@@ -40,7 +40,6 @@ from repro.core.halo import (
 from repro.core.layers import gat_aggregate, gat_aggregate_bucketed
 from repro.graph.remote import (
     HierPartitionedGraph,
-    PartitionedGraph,
     build_halo_plan,
     build_hier_halo_plan,
 )
@@ -555,12 +554,21 @@ class DistributedTrainer:
             if mesh is None:
                 raise ValueError("shard_map mode needs a mesh")
             self.mesh = mesh
+            # Commit params/opt state to the replicated sharding the
+            # updated params will carry from epoch 2 on (they mix with the
+            # step's P()-replicated grads); host-resident epoch-1 params
+            # would compile a second executable for the same step.
+            from jax.sharding import NamedSharding
+            _rep = NamedSharding(mesh, P())
+            self.params = jax.device_put(self.params, _rep)
+            self.opt_state = jax.device_put(self.opt_state, _rep)
             if dc.hierarchical:
                 # Physical two-level mesh: leading worker dim sharded over
                 # (group_axis, node_axis) — e.g. make_hier_worker_mesh.
                 data_axes = (dc.group_axis, dc.node_axis)
             else:
                 data_axes = dc.axis_name
+            self._data_axes = data_axes
             spec_data = jax.tree_util.tree_map(lambda _: P(data_axes), wd)
 
             def _squeeze(tree):
@@ -622,6 +630,15 @@ class DistributedTrainer:
             dims = self.cfg.dims()[: self.cfg.num_layers]
             self._cache = self.schedule.init_cache(
                 self.wd, dims, lead=self.wd.x.shape[:-2])
+            if self.mode == "shard_map":
+                # Commit the zero-fill to the same sharding the step
+                # returns its cache with; otherwise epoch 2's differently
+                # laid-out inputs compile a second executable.
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+                sh = NamedSharding(self.mesh, P(self._data_axes))
+                self._cache = jax.tree_util.tree_map(
+                    lambda a: jax.device_put(a, sh), self._cache)
         return (self.params, self.wd, key, self._cache,
                 jnp.asarray(self.epoch, jnp.int32))
 

@@ -15,7 +15,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.graph.generators import rmat_graph, sbm_graph, sbm_features
+from repro.graph.generators import sbm_graph, sbm_features
 from repro.graph.structure import Graph
 
 

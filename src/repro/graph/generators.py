@@ -13,7 +13,7 @@ relevant structural regimes (see DESIGN.md §8.3):
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

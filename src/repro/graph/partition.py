@@ -17,7 +17,7 @@ is well below a random partition's cut on community-structured graphs.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -8,7 +8,6 @@ backend the same calls lower to Mosaic.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.quant_pack import dequant_unpack, quant_pack

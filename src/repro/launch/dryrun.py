@@ -29,7 +29,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_arch
 from repro.launch.hlo_stats import parse_collectives
@@ -104,7 +103,6 @@ def cost_extrapolate(arch_name: str, shape_name: str, mesh) -> dict:
     def measure(layers):
         a = reduced_arch(arch, layers)
         if shape.kind == "train" and nm > 1:
-            import repro.configs.shapes as SH
             sh = dc.replace(shape, global_batch=shape.global_batch // nm)
             sp = _specs_for(a, sh, mesh, num_microbatches=1)
         else:
@@ -136,7 +134,6 @@ def cost_extrapolate(arch_name: str, shape_name: str, mesh) -> dict:
 def _specs_for(arch, shape, mesh, num_microbatches=None):
     """input_specs but for an already-materialized (possibly reduced) arch
     and shape object."""
-    from repro.launch import input_specs as IS
     import repro.launch.input_specs as mod
     reason = mod.skip_reason(arch, shape)
     if reason:
@@ -323,16 +320,29 @@ def run_gcn_dryrun(spec, mesh_name: str = None, save: bool = True,
               f"{order['wire_before_compute']} inter_wire_before_compute="
               f"{order['inter_wire_before_compute']}")
         if assert_overlap:
-            want_inter = bool(groups and groups > 1)
-            ok = order["wire_before_compute"] and (
-                order["inter_wire_before_compute"] or not want_inter)
-            if not ok:
+            # Served by the auditor's overlap-order rule (same invariant,
+            # same framework as `make audit`); reuse this run's session and
+            # lowered module instead of rebuilding.
+            from repro.analysis.hlo_rules import OverlapOrderRule
+            from repro.analysis.rules import AuditContext, Severity
+
+            ctx = AuditContext(spec, spec_name=shape_name)
+            ctx._session = session
+            ctx._lowered = lowered
+            if not any(s.overlap for s in session.schedule.stages):
                 raise AssertionError(
-                    "overlap check failed: wire collectives are not issued "
-                    f"before the aggregation compute (first_wire="
-                    f"{order['first_wire']}, first_inter_wire="
-                    f"{order['first_inter_wire']}, first_compute="
-                    f"{order['first_compute']})")
+                    "overlap check failed: no stage of the resolved "
+                    f"schedule overlaps ({session.schedule.describe()}) — "
+                    "pass --overlap (or a hierarchical topology, whose "
+                    "schedule overlaps by default)")
+            findings = OverlapOrderRule().check(ctx)
+            rec["audit_findings"] = [f.as_dict() for f in findings]
+            errors = [f for f in findings
+                      if f.severity == Severity.ERROR]
+            if errors:
+                raise AssertionError(
+                    "overlap check failed: " + "; ".join(
+                        f.message for f in errors))
     except Exception as e:
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"

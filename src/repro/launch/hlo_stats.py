@@ -25,18 +25,22 @@ per-device per-step collective traffic:
 
 from __future__ import annotations
 
+import math
 import re
-from collections import defaultdict
 from typing import Dict, List, Tuple
 
+# Sub-byte ints (XLA's s2/u2/s4/u4 packed types) carry fractional byte
+# widths; _type_bytes rounds a whole buffer up to whole bytes.
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16,
 }
 
 _TYPE_RE = re.compile(
-    r"(pred|s8|u8|s16|u16|bf16|f16|f32|f64|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+    r"(pred|s2|u2|s4|u4|s8|u8|s16|u16|bf16|f16|f32|f64|s32|u32|s64|u64|"
+    r"c64|c128)\[([0-9,]*)\]")
 # NB: tuple result types contain /*index=N*/ comments (with '='), so the
 # span between '=' and the op name must allow '='.
 _OP_RE = re.compile(
@@ -60,7 +64,7 @@ def _type_bytes(dtype: str, dims: str) -> int:
     if dims.strip():
         for d in dims.split(","):
             n *= int(d)
-    return n * _DTYPE_BYTES[dtype]
+    return math.ceil(n * _DTYPE_BYTES[dtype])
 
 
 def _line_stats(line: str):
@@ -199,22 +203,6 @@ def while_trip_counts(hlo_text: str) -> List[int]:
 # compute precedes the wire. ``collective_order`` parses that order.
 # --------------------------------------------------------------------------
 
-_STABLEHLO_COLLECTIVES = {
-    "stablehlo.all_to_all": "all-to-all",
-    "stablehlo.reduce_scatter": "reduce-scatter",
-    "stablehlo.all_gather": "all-gather",
-    "stablehlo.all_reduce": "all-reduce",
-    "stablehlo.collective_permute": "collective-permute",
-}
-# Wire starters: the ops that begin a stage's pipeline (the grouped inter
-# stage opens with its per-group psum_scatter = reduce-scatter; a2a stages
-# open with the all_to_all itself). all-gather/all-reduce are fan-out /
-# grad-sync ops, not wire starts.
-_WIRE_START = ("all-to-all", "reduce-scatter")
-_REPLICA_SHAPE_RE = re.compile(r"replica_groups\s*=\s*dense<.*?>\s*:\s*"
-                               r"tensor<(\d+)x(\d+)xi64>")
-
-
 def collective_order(lowered_text: str,
                      compute_ops: Tuple[str, ...] = ("dot_general",)) -> dict:
     """Program-order event trace of collectives vs aggregation compute.
@@ -236,39 +224,14 @@ def collective_order(lowered_text: str,
        "wire_before_compute":  first_wire precedes first_compute,
        "inter_wire_before_compute": first_inter_wire precedes it too}
     """
-    events: List[dict] = []
-    for i, line in enumerate(lowered_text.splitlines()):
-        for tag, kind in _STABLEHLO_COLLECTIVES.items():
-            if tag in line:
-                gm = _REPLICA_SHAPE_RE.search(line)
-                events.append({"line": i, "op": kind, "class": "collective",
-                               "group_size": int(gm.group(2)) if gm else None})
-                break
-        else:
-            for op in compute_ops:
-                if f"stablehlo.{op}" in line:
-                    events.append({"line": i, "op": op, "class": "compute",
-                                   "group_size": None})
-                    break
+    # Lazy import: the analysis package owns the structured StableHLO
+    # parser now (repro.analysis.ir generalizes the walk this function
+    # used to inline); importing it at module scope would cycle through
+    # repro.analysis -> ir -> compiled_collectives -> this module.
+    from repro.analysis.ir import parse_stablehlo
 
-    def first(pred):
-        return next((e for e in events if pred(e)), None)
-
-    first_wire = first(lambda e: e["op"] in _WIRE_START)
-    first_inter = first(lambda e: e["op"] == "reduce-scatter")
-    first_compute = first(lambda e: e["class"] == "compute")
-
-    def precedes(a, b):
-        return a is not None and b is not None and a["line"] < b["line"]
-
-    return {
-        "events": events,
-        "first_wire": first_wire,
-        "first_inter_wire": first_inter,
-        "first_compute": first_compute,
-        "wire_before_compute": precedes(first_wire, first_compute),
-        "inter_wire_before_compute": precedes(first_inter, first_compute),
-    }
+    return parse_stablehlo(lowered_text,
+                           compute_ops=compute_ops).collective_order()
 
 
 # --------------------------------------------------------------------------
@@ -288,7 +251,8 @@ def collective_order(lowered_text: str,
 
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
 _SHAPE_RE = re.compile(
-    r"(pred|s8|u8|s16|u16|bf16|f16|f32|f64|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+    r"(pred|s2|u2|s4|u4|s8|u8|s16|u16|bf16|f16|f32|f64|s32|u32|s64|u64|"
+    r"c64|c128)\[([0-9,]*)\]")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
@@ -317,7 +281,7 @@ def _parse_type(type_str: str):
             for d in dims.split(","):
                 n *= int(d)
                 dl.append(int(d))
-        total += n * _DTYPE_BYTES[dt]
+        total += math.ceil(n * _DTYPE_BYTES[dt])
         if first_dims is None:
             first_dims = dl
     return total, first_dims

@@ -9,16 +9,13 @@ carve-out).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import InputShape, get_shape
-from repro.models import common as C
 from repro.models.transformer import ArchConfig, init_cache, init_params
 from repro.optim.adamw import AdamWState
 from repro.sharding import specs as SP

@@ -50,7 +50,6 @@ def run_gcn(args):
 
 def run_lm(args):
     import jax
-    import jax.numpy as jnp
     from repro.configs import get_arch, get_smoke_arch
     from repro.models import init_params, train_step
     from repro.optim import adamw_init

@@ -8,7 +8,6 @@ sub-quadratic variant used for dense archs on long_500k), and M-RoPE.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax

@@ -14,7 +14,7 @@ switch-style load-balance auxiliary loss.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ production shapes (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.run.spec import RunSpec
 

@@ -76,12 +76,23 @@ def main() -> None:
                          "backend-lowering regressions)")
     ap.add_argument("--list", action="store_true",
                     help="just list the specs (name, hash, describe line)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the static-analysis gate (repro.analysis: "
+                         "all HLO rules + the AST lint) over every spec "
+                         "instead of the build/lower smoke pass")
+    ap.add_argument("--out", default="",
+                    help="with --audit: write the findings report json")
     args = ap.parse_args()
     spec_dir = Path(args.spec_dir)
     if args.list:
         for path in sorted(spec_dir.glob("*.json")):
             spec = RunSpec.load(path)
             print(f"{path.name:28s} {spec.describe()}")
+        return
+    if args.audit:
+        from repro.analysis.audit import main as audit_main
+        audit_main(["--spec", str(spec_dir)]
+                   + (["--out", args.out] if args.out else []))
         return
     results = run_matrix(spec_dir, compile_step=args.compile)
     errs = [r for r in results if r["status"] == "error"]

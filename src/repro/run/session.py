@@ -27,7 +27,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 import repro.run.sources as sources  # populates the registries on import
-from repro.run.spec import GRAPH_SOURCES, FEATURE_SOURCES, RunSpec, SpecError
+from repro.run.spec import GRAPH_SOURCES, FEATURE_SOURCES, RunSpec
 
 
 def build_graph(spec: RunSpec) -> Tuple[Any, np.ndarray]:
@@ -161,6 +161,53 @@ class Session:
         """Per-stage predicted wire bytes per epoch under the schedule."""
         f = self.spec.graph.feat_dim if feat_dim is None else feat_dim
         return self.schedule.wire_volume_bytes(self.pg.stats, f)
+
+    def predicted_hlo_wire_bytes(self) -> Dict[str, float]:
+        """Per-device all-to-all payload bytes expected in ONE lowered
+        step (forward + backward wire), derived from the schedule's
+        device plans — the number the compiled module should realize
+        exactly. :meth:`predicted_wire_bytes` is the paper's cost model
+        (amortized, padding-free, job-level); this is the lowering's
+        ground truth, and the auditor's ``predicted-bytes`` rule holds
+        the compiled module to it.
+
+        Per stage and layer: ``wire_rows x feat x 4`` bytes each
+        direction — fp32 rows, or int32 quant holders (sub-byte
+        payloads ship in i32 until XLA packs them) — plus the two fp32
+        (zero, scale) params per ``ROW_GROUP`` rows when the stage
+        quantizes. The grouped inter stage wires only its 1/W shard.
+        """
+        from repro.quant.stochastic import ROW_GROUP
+
+        cfg = self.trainer.cfg
+        feats = cfg.dims()[: cfg.num_layers]
+        out: Dict[str, float] = {}
+        total = 0.0
+        for stage in self.schedule.stages:
+            plan = self.schedule.plan_for(stage, self.wd)
+            rows = int(plan.send_gather_idx.shape[-1])
+            topo = self.schedule.topo(stage)
+            if topo.kind == "grouped":
+                rows //= topo.shard_size
+            stage_bytes = 0.0
+            for f in feats:
+                payload = rows * f * 4.0
+                if stage.bits:
+                    payload += 2.0 * (rows // ROW_GROUP) * 4.0
+                stage_bytes += 2.0 * payload
+            out[stage.level] = stage_bytes
+            total += stage_bytes
+        out["total"] = total
+        return out
+
+    def step_cache_size(self) -> Optional[int]:
+        """Compiled executables behind the jitted train step (None when
+        this JAX version exposes no counter). The auditor's
+        ``retrace-guard`` expects exactly 1 after N epochs."""
+        step = self.trainer._step
+        if hasattr(step, "_cache_size"):
+            return int(step._cache_size())
+        return None
 
     def describe(self) -> str:
         return self.spec.describe()

@@ -36,7 +36,7 @@ import hashlib
 import json
 import typing
 from dataclasses import dataclass, field, fields
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 from repro.utils.registry import Registry
 

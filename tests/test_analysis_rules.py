@@ -1,0 +1,300 @@
+"""The audit rule layer (repro.analysis): golden-fixture tests.
+
+Each mutant fixture injects exactly one paper-invariant violation into a
+pristine flagship-topology module (G=2 groups x W=4 workers, Int2 inter
+wire) and must trigger exactly its rule; the pristine module must pass
+all structural rules. Rules run over an :class:`AuditContext` with the
+parsed module injected — the schedule resolves from the spec alone, so
+no session/graph build (and no compile) happens here.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+import repro.analysis  # noqa: F401  (registers the HLO rules)
+from repro.analysis.ast_lint import lint_source
+from repro.analysis.audit import exit_code
+from repro.analysis.hlo_rules import stage_wire_summary
+from repro.analysis.ir import parse_stablehlo
+from repro.analysis.rules import (
+    RULES,
+    AuditContext,
+    Finding,
+    Severity,
+    run_rules,
+    worst_severity,
+)
+from repro.run.spec import RunSpec
+
+SPECS = Path(__file__).resolve().parents[1] / "specs"
+FLAGSHIP = SPECS / "flagship_hier_int2_overlap.json"
+
+STRUCTURAL = ("overlap-order", "wire-dtype", "replica-groups")
+
+# Replica-group attributes of the flagship topology (8 workers):
+#   inter wire  -> 4 groups of G=2  (one peer per group, across groups)
+#   intra wire  -> 2 groups of W=4  (within each group)
+#   gradients   -> 1 group of G*W=8
+_G2 = "dense<[[0, 4], [1, 5], [2, 6], [3, 7]]> : tensor<4x2xi64>"
+_G4 = "dense<[[0, 1, 2, 3], [4, 5, 6, 7]]> : tensor<2x4xi64>"
+_G8 = "dense<[[0, 1, 2, 3, 4, 5, 6, 7]]> : tensor<1x8xi64>"
+
+# The Int2 inter stage's quantized payload (int32 holders) and its fp32
+# (zero, scale) params -- trailing dim 1 marks them as params, not payload.
+I32_PAYLOAD = ('    %1 = "stablehlo.all_to_all"(%arg1) <{channel_handle = '
+               "#stablehlo.channel_handle<handle = 2, type = 1>, "
+               "concat_dimension = 0 : i64, replica_groups = " + _G2 + ", "
+               "split_count = 2 : i64, split_dimension = 0 : i64}> : "
+               "(tensor<2x28x16xi32>) -> tensor<2x28x16xi32>")
+
+DOT_LINE = ("    %6 = stablehlo.dot_general %5, %arg4, contracting_dims = "
+            "[1] x [0] : (tensor<128x16xf32>, tensor<16x32xf32>) -> "
+            "tensor<128x32xf32>")
+
+PRISTINE = f"""\
+module @jit_train_step attributes {{mhlo.num_partitions = 8 : i32}} {{
+  func.func public @main(%arg0: tensor<112x16xf32>, %arg1: tensor<2x28x16xi32>) -> (tensor<f32>) {{
+    %0 = "stablehlo.reduce_scatter"(%arg0) <{{channel_handle = #stablehlo.channel_handle<handle = 1, type = 1>, replica_groups = {_G4}, scatter_dimension = 0 : i64}}> ({{
+    ^bb0(%lhs: tensor<f32>, %rhs: tensor<f32>):
+      %s = stablehlo.add %lhs, %rhs : tensor<f32>
+      stablehlo.return %s : tensor<f32>
+    }}) : (tensor<112x16xf32>) -> tensor<28x16xf32>
+{I32_PAYLOAD}
+    %2 = "stablehlo.all_to_all"(%arg2) <{{concat_dimension = 0 : i64, replica_groups = {_G2}, split_count = 2 : i64, split_dimension = 0 : i64}}> : (tensor<2x7x1xf32>) -> tensor<2x7x1xf32>
+    %3 = "stablehlo.all_to_all"(%arg3) <{{concat_dimension = 0 : i64, replica_groups = {_G2}, split_count = 2 : i64, split_dimension = 0 : i64}}> : (tensor<2x7x1xf32>) -> tensor<2x7x1xf32>
+    %4 = "stablehlo.all_to_all"(%arg0) <{{concat_dimension = 0 : i64, replica_groups = {_G4}, split_count = 4 : i64, split_dimension = 0 : i64}}> : (tensor<4x32x16xf32>) -> tensor<4x32x16xf32>
+    %5 = "stablehlo.all_gather"(%4) <{{all_gather_dim = 0 : i64, replica_groups = {_G4}}}> : (tensor<4x32x16xf32>) -> tensor<16x32x16xf32>
+{DOT_LINE}
+    %7 = "stablehlo.all_reduce"(%6) <{{channel_handle = #stablehlo.channel_handle<handle = 5, type = 1>, replica_groups = {_G8}, use_global_device_ids}}> ({{
+    ^bb0(%lhs: tensor<f32>, %rhs: tensor<f32>):
+      %s2 = stablehlo.add %lhs, %rhs : tensor<f32>
+      stablehlo.return %s2 : tensor<f32>
+    }}) : (tensor<f32>) -> tensor<f32>
+    return %7 : tensor<f32>
+  }}
+}}
+"""
+
+# Mutant 1: the aggregation dot enters the trace before any wire
+# collective (the overlap regression check-overlap used to catch).
+WIRE_AFTER_DOT = PRISTINE.replace(
+    '    %0 = "stablehlo.reduce_scatter"',
+    DOT_LINE.replace("%6", "%pre").replace("%5", "%arg0")
+    + '\n    %0 = "stablehlo.reduce_scatter"')
+
+# Mutant 2: a full-width fp32 all-to-all on the Int2 stage's replica
+# groups -- something dequantized before the wire.
+F32_LEAK = ('    %9 = "stablehlo.all_to_all"(%arg5) <{concat_dimension = '
+            "0 : i64, replica_groups = " + _G2 + ", split_count = 2 : i64, "
+            "split_dimension = 0 : i64}> : (tensor<2x28x16xf32>) -> "
+            "tensor<2x28x16xf32>")
+F32_UNDER_INT2 = PRISTINE.replace(I32_PAYLOAD, I32_PAYLOAD + "\n" + F32_LEAK)
+
+# Mutant 3: the gradient all_reduce spans groups of 3 -- not an axis of
+# the 2x4 topology.
+WRONG_GROUPS = PRISTINE.replace(
+    _G8, "dense<[[0, 1, 2], [3, 4, 5]]> : tensor<2x3xi64>")
+
+
+def _ctx(module_text, spec_path=FLAGSHIP):
+    spec = RunSpec.load(spec_path)
+    ctx = AuditContext(spec, spec_name="fixture")
+    ctx._module = parse_stablehlo(module_text)
+    return ctx
+
+
+def _run(module_text):
+    res = run_rules(_ctx(module_text), rule_ids=STRUCTURAL)
+    assert res["rule_errors"] == []
+    return res
+
+
+class TestGoldenFixtures:
+    def test_pristine_flagship_module_is_clean(self):
+        res = _run(PRISTINE)
+        assert sorted(res["ran"]) == sorted(STRUCTURAL)
+        assert res["findings"] == []
+
+    def test_wire_after_dot_triggers_overlap_order_only(self):
+        res = _run(WIRE_AFTER_DOT)
+        assert [f.rule for f in res["findings"]] == ["overlap-order"]
+        f = res["findings"][0]
+        assert f.severity == Severity.ERROR
+        assert "overlap" in f.message
+        assert f.fix_hint
+
+    def test_f32_a2a_under_int2_triggers_wire_dtype_only(self):
+        res = _run(F32_UNDER_INT2)
+        assert [f.rule for f in res["findings"]] == ["wire-dtype"]
+        f = res["findings"][0]
+        assert f.severity == Severity.ERROR
+        assert "f32" in f.message
+        # Location points at the leaked op's line in the module.
+        assert f.location.startswith("lowered:")
+
+    def test_wrong_replica_group_size_triggers_replica_groups_only(self):
+        res = _run(WRONG_GROUPS)
+        assert [f.rule for f in res["findings"]] == ["replica-groups"]
+        f = res["findings"][0]
+        assert f.severity == Severity.ERROR
+        assert f.data["group_size"] == 3
+        assert f.data["allowed"] == [2, 4, 8]
+
+    def test_quant_params_are_not_payload(self):
+        """The fp32 (zero, scale) trailing-dim-1 all-to-alls on the Int2
+        groups must not read as dequant-before-wire."""
+        module = parse_stablehlo(PRISTINE)
+        params = [o for o in module.collectives("all-to-all")
+                  if o.group_size == 2 and o.is_float]
+        assert len(params) == 2
+        assert all(o.trailing_dim == 1 for o in params)
+
+    def test_vmap_spec_skips_collective_rules(self):
+        """vmap lowers no collectives, so the structural rules must
+        report skipped (not silently passed)."""
+        d = json.loads(FLAGSHIP.read_text())
+        d["exec"]["mode"] = "vmap"
+        ctx = AuditContext(RunSpec.from_dict(d), spec_name="vmap")
+        res = run_rules(ctx, rule_ids=STRUCTURAL)
+        assert res["ran"] == []
+        assert sorted(res["skipped"]) == sorted(STRUCTURAL)
+        assert res["findings"] == []
+
+
+class TestRegistryAndContext:
+    def test_all_five_rules_registered(self):
+        for rid in ("overlap-order", "wire-dtype", "replica-groups",
+                    "predicted-bytes", "retrace-guard"):
+            assert rid in RULES
+
+    def test_schedule_resolves_from_spec_alone(self):
+        """Structural rules audit fixture text without a session: the
+        schedule (and its per-stage wire group sizes) must come from the
+        spec's topology knobs only."""
+        ctx = AuditContext(RunSpec.load(FLAGSHIP), spec_name="x")
+        sizes = stage_wire_summary(ctx)
+        assert sizes == {"inter": 2, "intra": 4}
+        assert ctx._session is None  # no build happened
+
+    def test_crashing_rule_reports_error_finding(self):
+        class Boom:
+            id = "boom"
+
+            def applies(self, ctx):
+                return True
+
+            def check(self, ctx):
+                raise RuntimeError("kaboom")
+
+        RULES.add("boom", Boom())
+        try:
+            res = run_rules(_ctx(PRISTINE), rule_ids=["boom"])
+            assert res["rule_errors"] == ["boom"]
+            assert res["findings"][0].severity == Severity.ERROR
+            assert "kaboom" in res["findings"][0].message
+        finally:
+            del RULES._entries["boom"]
+
+
+class TestAstLint:
+    def test_leftover_jax_debug_flagged_anywhere(self):
+        src = ("import jax\n"
+               "def f(x):\n"
+               "    jax.debug.print('x={x}', x=x)\n"
+               "    return x\n")
+        findings = lint_source(src, "src/repro/models/gcn.py")
+        assert [f.rule for f in findings] == ["debug-stmt"]
+        assert findings[0].location.endswith("gcn.py:3")
+
+    def test_breakpoint_and_pdb_flagged(self):
+        src = ("import pdb\n"
+               "def f():\n"
+               "    breakpoint()\n"
+               "    pdb.set_trace()\n")
+        findings = lint_source(src, "src/repro/run/cli.py")
+        assert [f.rule for f in findings] == ["debug-stmt", "debug-stmt"]
+
+    def test_host_sync_in_traced_hot_path_flagged(self):
+        src = ("import jax.numpy as jnp\n"
+               "import numpy as np\n"
+               "def step(x):\n"
+               "    y = jnp.sum(x)\n"
+               "    z = np.asarray(y)\n"
+               "    return z, y.item()\n")
+        findings = lint_source(src, "src/repro/core/trainer.py")
+        assert [f.rule for f in findings] == ["host-sync", "host-sync"]
+        assert "np.asarray" in findings[0].message
+        assert ".item()" in findings[1].message
+
+    def test_host_sync_ignored_outside_hot_files(self):
+        src = ("import jax.numpy as jnp\n"
+               "import numpy as np\n"
+               "def summarize(x):\n"
+               "    return np.asarray(jnp.sum(x)).item()\n")
+        assert lint_source(src, "src/repro/launch/report.py") == []
+
+    def test_pure_numpy_plan_building_in_hot_file_ok(self):
+        """Host-side plan building (no jnp/lax in the function) is
+        legitimate numpy use inside core/exchange.py."""
+        src = ("import numpy as np\n"
+               "def build_plan(idx):\n"
+               "    return np.asarray(idx, dtype=np.int32)\n")
+        assert lint_source(src, "src/repro/core/exchange.py") == []
+
+    def test_item_with_args_not_flagged(self):
+        src = ("import jax.numpy as jnp\n"
+               "def step(d):\n"
+               "    jnp.zeros(3)\n"
+               "    return d.item('key')\n")
+        assert lint_source(src, "src/repro/core/trainer.py") == []
+
+    def test_syntax_error_is_a_finding_not_a_crash(self):
+        findings = lint_source("def f(:\n", "src/repro/broken.py")
+        assert len(findings) == 1
+        assert findings[0].severity == Severity.ERROR
+
+
+class TestExitCodes:
+    @staticmethod
+    def _report(worst):
+        return {"summary": {"worst": worst}}
+
+    def test_clean_is_zero(self):
+        assert exit_code(self._report(None)) == 0
+
+    def test_info_is_zero_at_any_threshold(self):
+        assert exit_code(self._report("info")) == 0
+        assert exit_code(self._report("info"), fail_on="warning") == 0
+
+    def test_warning_below_default_threshold(self):
+        assert exit_code(self._report("warning")) == 0
+        assert exit_code(self._report("warning"), fail_on="warning") == 1
+
+    def test_error_is_two(self):
+        assert exit_code(self._report("error")) == 2
+        assert exit_code(self._report("error"), fail_on="warning") == 2
+
+    def test_worst_severity_ordering(self):
+        fs = [Finding(rule="r", severity=s, message="")
+              for s in ("info", "error", "warning")]
+        assert worst_severity(fs) == "error"
+        assert worst_severity(fs[:1]) == "info"
+        assert worst_severity([]) is None
+
+
+@pytest.mark.slow
+def test_flagship_audits_clean_end_to_end():
+    """The checked-in flagship spec passes every rule on the real build:
+    lower, compile, train -- no findings, nothing skipped except nothing."""
+    from repro.analysis.audit import audit_spec
+
+    spec = RunSpec.load(FLAGSHIP)
+    res = audit_spec(spec, spec_name="flagship", steps=2)
+    assert res["rule_errors"] == []
+    assert [str(f) for f in res["findings"]] == []
+    assert sorted(res["ran"]) == ["overlap-order", "predicted-bytes",
+                                  "replica-groups", "retrace-guard",
+                                  "wire-dtype"]
+    assert res["skipped"] == []

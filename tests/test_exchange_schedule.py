@@ -7,10 +7,8 @@ comm under shard_map, and mixed per-stage wire formats (Int2 inter + fp32
 intra) — plus the CommStats-vs-schedule wire-byte accounting agreement.
 """
 
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

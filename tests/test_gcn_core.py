@@ -1,7 +1,6 @@
 """GCN core: model semantics, distributed == single-device equivalence,
 quantized communication, convergence (paper Figs 2, 11; §6)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -18,11 +17,9 @@ from repro.core import (
     train_gcn_single,
 )
 from repro.core import model as M
-from repro.core.halo import stack_halo_plan
 from repro.core.trainer import _dist_forward, make_single_agg_fn
 from repro.graph import build_partitioned_graph, sbm_graph
 from repro.graph.generators import sbm_features
-from repro.graph.remote import build_halo_plan
 
 
 @pytest.fixture(scope="module")

@@ -7,7 +7,6 @@ unit edge weights, where every partial sum is exact in fp32 and therefore
 independent of the association order the two plans use.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ from repro.core.halo import (
     stack_halo_plan,
     stack_hier_plan,
 )
-from repro.core.trainer import _dist_forward, _local_aggregate
+from repro.core.trainer import _dist_forward
 from repro.graph import (
     build_hier_halo_plan,
     build_hierarchical_partitioned_graph,

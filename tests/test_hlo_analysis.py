@@ -91,6 +91,42 @@ ENTRY %main (a: f32[2]) -> f32[2] {
         assert a2a["count"] == 1
         assert a2a["result_bytes"] == 4 * 7 * 4
 
+    def test_sub_byte_s4_all_to_all(self):
+        """XLA's packed sub-byte s4/u4 payloads (the Int4 wire once XLA
+        packs it) carry fractional byte widths, rounded up per buffer."""
+        hlo = """
+ENTRY %main (a: s4[112,16]) -> s4[112,16] {
+  %all-to-all.7 = s4[112,16]{1,0} all-to-all(s4[112,16]{1,0} %a), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+        st = parse_collectives(hlo)
+        a2a = st["all-to-all"]
+        assert a2a["count"] == 1
+        assert a2a["result_bytes"] == 896  # ceil(112*16 * 0.5)
+        np.testing.assert_allclose(a2a["wire_bytes"], 896 * 3 / 4)
+
+    def test_sub_byte_s2_rounds_up_per_buffer(self):
+        hlo = """
+ENTRY %main (a: s2[9]) -> s2[9] {
+  %cp = s2[9]{0} collective-permute(s2[9]{0} %a), source_target_pairs={{0,1}}
+}
+"""
+        st = parse_collectives(hlo)
+        assert st["collective-permute"]["result_bytes"] == 3  # ceil(9/4)
+
+    def test_tuple_result_sub_byte_all_to_all(self):
+        """Tuple-typed results with sub-byte elements: each member buffer
+        rounds up independently (4 x ceil(7 * 0.5) = 16, not ceil(14))."""
+        hlo = """
+ENTRY %main (a: u4[2]) -> u4[2] {
+  %all-to-all.2 = (u4[1,7]{1,0}, u4[1,7]{1,0}, /*index=2*/u4[1,7]{1,0}, u4[1,7]{1,0}) all-to-all(%a, %b, %c, %d), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+        st = parse_collectives(hlo)
+        a2a = st["all-to-all"]
+        assert a2a["count"] == 1
+        assert a2a["result_bytes"] == 4 * 4
+
     def test_while_loop_multiplication_end_to_end(self):
         """Compiled JAX scan with a psum inside (vmap->jit collective)."""
         mesh = jax.make_mesh((1,), ("w",))

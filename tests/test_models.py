@@ -9,7 +9,6 @@ import pytest
 
 from repro.configs import ARCH_NAMES, get_arch, get_smoke_arch
 from repro.models import (
-    compute_loss,
     forward_train,
     init_cache,
     init_params,
@@ -148,7 +147,7 @@ class TestFamilySpecifics:
                                    rtol=3e-2, atol=3e-3)
 
     def test_sliding_window_masks_far_context(self):
-        from repro.models.attention import AttnConfig, sdpa_chunked
+        from repro.models.attention import sdpa_chunked
         b, s, h, hd = 1, 32, 2, 16
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
         q = jax.random.normal(k1, (b, s, h, hd))

@@ -1,12 +1,10 @@
 """Communication performance model (paper Eqns 2-8, Fig 7)."""
 
 import numpy as np
-import pytest
 
 from repro.core.perf_model import (
     ABCI_XEON,
     FUGAKU_A64FX,
-    TPU_V5E,
     comm_time,
     delta_ratio,
     epoch_time_model,

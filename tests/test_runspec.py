@@ -5,7 +5,6 @@ Int2-inter default flip, and build_session-vs-hand-constructed parity
 bit-identical first-epoch loss when loaded by another)."""
 
 import argparse
-import dataclasses
 import json
 from pathlib import Path
 

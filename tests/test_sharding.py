@@ -6,10 +6,8 @@ the rule layer itself on small meshes.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_arch, get_smoke_arch
 from repro.launch.hlo_stats import parse_collectives

@@ -2,8 +2,6 @@
 laptop scale): comm-volume reduction (Table 5), quantized-comm accuracy
 parity (Fig 11/Table 3), and full distributed training flow (Fig 2)."""
 
-import jax
-import numpy as np
 import pytest
 
 from repro.core import (
