@@ -1,7 +1,7 @@
 # Tier-1 verification (same command as ROADMAP.md).
 PY ?= python
 
-.PHONY: check check-fast check-overlap audit spec-matrix bench-comm bench-comm-sweep bench-agg
+.PHONY: check check-fast check-overlap audit spec-matrix bench-comm bench-comm-sweep bench-agg bench-scaling-measured
 
 check:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -48,3 +48,14 @@ AGG_OUT ?= bench_aggregation.json
 bench-agg:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/aggregation.py \
 		--quick --out $(AGG_OUT)
+
+# Measured multi-process scaling: real OS processes over the shared-memory
+# store, wall-clock epochs with overlap on/off beside the hier_epoch_time
+# prediction, per-rank RSS, cd-skip wire bytes. Exits non-zero if any
+# shared-memory segment leaks. MEASURED_OUT overrides the artifact path;
+# MEASURED_FLAGS adds e.g. --quick for the CI smoke.
+MEASURED_OUT ?= experiments/BENCH_scaling_measured.json
+MEASURED_FLAGS ?=
+bench-scaling-measured:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/scaling.py \
+		--out $(MEASURED_OUT) $(MEASURED_FLAGS)

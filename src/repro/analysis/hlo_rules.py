@@ -257,6 +257,12 @@ class RetraceGuardRule(Rule):
                    "epochs — a leaked host value in the step signature "
                    "recompiles every epoch")
 
+    def applies(self, ctx: AuditContext) -> bool:
+        # multiproc executes eagerly across processes: there is no single
+        # jitted step whose executable count could be audited (and no
+        # lowered module — like the other rules under vmap, report skipped).
+        return ctx.spec.exec.mode != "multiproc"
+
     def check(self, ctx: AuditContext) -> List[Finding]:
         n = max(2, min(ctx.steps, ctx.spec.exec.epochs or 2))
         session = ctx.session

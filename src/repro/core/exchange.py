@@ -127,8 +127,12 @@ class DeviceHaloPlan(NamedTuple):
     recv_ell_t: Optional["segagg.DeviceBucketedEll"] = None
 
 
-def _recv_bucketed(hp, num_rows: int):
-    """Bucketed-ELL (fwd + reverse) of each worker's recv scatter.
+def host_recv_bucketed(hp, num_rows: int):
+    """Bucketed-ELL (fwd + reverse) of each worker's recv scatter, as host
+    *stacked* bucket tuples ([P, ...] numpy, ``stack_bucketed_ells``
+    format). This is the exported plan form the multiproc runtime
+    publishes through the shared-memory store; :func:`stack_halo_plan`
+    device-materializes the same layout for the in-process backends.
 
     The host plan's padding entries carry weight 0 — they are dropped here
     so they don't inflate row 0's degree class."""
@@ -142,8 +146,13 @@ def _recv_bucketed(hp, num_rows: int):
             hp.recv_weight[p][keep], num_rows, wire_rows)
         fwd.append(gstruct.bucketed_ell_from_csr(csr))
         rev.append(gstruct.bucketed_ell_from_csr(gstruct.transpose_csr(csr)))
-    return (segagg.device_bucketed(gstruct.stack_bucketed_ells(fwd)),
-            segagg.device_bucketed(gstruct.stack_bucketed_ells(rev)))
+    return (gstruct.stack_bucketed_ells(fwd),
+            gstruct.stack_bucketed_ells(rev))
+
+
+def _recv_bucketed(hp, num_rows: int):
+    fwd, rev = host_recv_bucketed(hp, num_rows)
+    return segagg.device_bucketed(fwd), segagg.device_bucketed(rev)
 
 
 def stack_halo_plan(hp, num_rows: Optional[int] = None) -> DeviceHaloPlan:

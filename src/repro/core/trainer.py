@@ -318,14 +318,38 @@ class DistConfig:
         return self.axis_name
 
 
-def prepare_distributed(
+class HostWorkerData(NamedTuple):
+    """Partition-time worker arrays *before* device placement: the pure
+    numpy product of the build (padded per-partition arrays stacked on the
+    worker axis, stacked bucketed-ELL tuples, host halo plans). The
+    in-process backends lift it onto the device via
+    :func:`_lift_worker_data`; the multiproc runtime instead publishes it
+    byte-for-byte through the shared-memory store and each rank
+    device-copies only its own slice."""
+
+    x: np.ndarray            # [P, M, F] f32
+    labels: np.ndarray       # [P, M] i32
+    train_mask: np.ndarray   # [P, M] bool
+    eval_mask: np.ndarray    # [P, M] bool
+    owned_mask: np.ndarray   # [P, M] bool
+    coo_src: np.ndarray      # [P, nnz_max] i64
+    coo_dst: np.ndarray      # [P, nnz_max] i64
+    coo_w: np.ndarray        # [P, nnz_max] f32
+    ell_stacked: list        # stack_bucketed_ells output (fwd)
+    ell_t_stacked: list      # stack_bucketed_ells output (reverse graph)
+    plan: Optional[object]   # graph.remote.HaloPlan (flat) or None
+    hier_plan: Optional[object]  # graph.remote.HierHaloPlan or None
+    max_owned: int
+
+
+def prepare_distributed_host(
     g: Graph,
     x: np.ndarray,
     pg,
     eval_mask: Optional[np.ndarray] = None,
-    norm_applied: bool = True,
-) -> WorkerData:
-    """Pad per-partition arrays to common shapes and stack on the worker axis.
+) -> HostWorkerData:
+    """Pad per-partition arrays to common shapes and stack on the worker
+    axis — the host (numpy-only) half of :func:`prepare_distributed`.
 
     ``g`` must already carry edge weights (use gcn_normalized/mean_normalized
     *before* partitioning so pre-aggregation applies source-side weights).
@@ -373,22 +397,53 @@ def prepare_distributed(
         bucketed_ell_from_csr(transpose_csr(c)) for c in pg.local_csr]
 
     common = dict(
-        x=jnp.asarray(xs), labels=jnp.asarray(ls), train_mask=jnp.asarray(tm),
-        eval_mask=jnp.asarray(em), owned_mask=jnp.asarray(om),
-        coo_src=jnp.asarray(cs, jnp.int32), coo_dst=jnp.asarray(cd_, jnp.int32),
-        coo_w=jnp.asarray(cw),
-        ell=device_bucketed(stack_bucketed_ells(local_ell)),
-        ell_t=device_bucketed(stack_bucketed_ells(local_ell_t)),
+        x=xs, labels=ls, train_mask=tm, eval_mask=em, owned_mask=om,
+        coo_src=cs, coo_dst=cd_, coo_w=cw,
+        ell_stacked=stack_bucketed_ells(local_ell),
+        ell_t_stacked=stack_bucketed_ells(local_ell_t),
+        max_owned=M_,
     )
     if isinstance(pg, HierPartitionedGraph):
         # build_hier_halo_plan already pads both levels to quant row groups.
-        return WorkerData(**common, hier_plan=stack_hier_plan(
-            build_hier_halo_plan(pg), num_rows=M_))
+        return HostWorkerData(**common, plan=None,
+                              hier_plan=build_hier_halo_plan(pg))
     # Pad wire rows per pair to a multiple of the quant row group (4).
     R = pg.stats.padded_rows_per_pair
     R = max(4, (R + 3) // 4 * 4)
-    hp = build_halo_plan(pg, rows_per_pair=R)
-    return WorkerData(**common, plan=stack_halo_plan(hp, num_rows=M_))
+    return HostWorkerData(**common, plan=build_halo_plan(pg, rows_per_pair=R),
+                          hier_plan=None)
+
+
+def _lift_worker_data(hwd: HostWorkerData) -> WorkerData:
+    """Device-materialize a HostWorkerData for the in-process backends
+    (stacked over the worker axis; vmap/shard_map slice per worker)."""
+    common = dict(
+        x=jnp.asarray(hwd.x), labels=jnp.asarray(hwd.labels),
+        train_mask=jnp.asarray(hwd.train_mask),
+        eval_mask=jnp.asarray(hwd.eval_mask),
+        owned_mask=jnp.asarray(hwd.owned_mask),
+        coo_src=jnp.asarray(hwd.coo_src, jnp.int32),
+        coo_dst=jnp.asarray(hwd.coo_dst, jnp.int32),
+        coo_w=jnp.asarray(hwd.coo_w),
+        ell=device_bucketed(hwd.ell_stacked),
+        ell_t=device_bucketed(hwd.ell_t_stacked),
+    )
+    if hwd.hier_plan is not None:
+        return WorkerData(**common, hier_plan=stack_hier_plan(
+            hwd.hier_plan, num_rows=hwd.max_owned))
+    return WorkerData(**common, plan=stack_halo_plan(
+        hwd.plan, num_rows=hwd.max_owned))
+
+
+def prepare_distributed(
+    g: Graph,
+    x: np.ndarray,
+    pg,
+    eval_mask: Optional[np.ndarray] = None,
+    norm_applied: bool = True,
+) -> WorkerData:
+    """:func:`prepare_distributed_host` + device lift (see both)."""
+    return _lift_worker_data(prepare_distributed_host(g, x, pg, eval_mask))
 
 
 def _local_aggregate(h: jax.Array, wd: WorkerData,

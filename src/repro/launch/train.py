@@ -38,14 +38,23 @@ def run_gcn(args):
           f"post={s.post} hybrid={s.hybrid} (selected={s.selected})")
     print(f"exchange schedule: {session.schedule.describe()}")
     t0 = time.time()
-    hist = session.fit()
-    dt = time.time() - t0
-    for h in hist:
-        print(f"epoch {h['epoch']:4d} loss {h['loss']:.4f} "
-              f"train_acc {h['train_acc']:.4f} eval_acc {h.get('eval_acc', 0):.4f}")
-    epochs = spec.exec.epochs
-    print(f"trained {epochs} epochs in {dt:.1f}s "
-          f"({dt / max(epochs, 1) * 1e3:.1f} ms/epoch)")
+    try:
+        hist = session.fit()
+        dt = time.time() - t0
+        for h in hist:
+            print(f"epoch {h['epoch']:4d} loss {h['loss']:.4f} "
+                  f"train_acc {h['train_acc']:.4f} eval_acc {h.get('eval_acc', 0):.4f}")
+        epochs = spec.exec.epochs
+        print(f"trained {epochs} epochs in {dt:.1f}s "
+              f"({dt / max(epochs, 1) * 1e3:.1f} ms/epoch)")
+        if spec.exec.mode == "multiproc":
+            smry = session.trainer.summary()
+            rss = [r["rss_after_slices"] for r in smry.get("ranks", [])]
+            print(f"multiproc: {smry['nprocs']} procs, shared store "
+                  f"{smry['store_bytes'] / 1e6:.1f} MB (one copy), "
+                  f"rank RSS {[round(r / 1e6, 1) for r in rss]} MB")
+    finally:
+        session.close()
 
 
 def run_lm(args):
@@ -151,8 +160,15 @@ def main():
                     help="alias for --set exec.epochs=N")
     ap.add_argument("--lr", type=float, default=None,
                     help="alias for --set exec.lr=LR")
-    ap.add_argument("--mode", default=None, choices=["vmap", "shard_map"],
-                    help="alias for --set exec.mode=MODE")
+    ap.add_argument("--mode", default=None,
+                    choices=["vmap", "shard_map", "multiproc"],
+                    help="alias for --set exec.mode=MODE (multiproc spawns "
+                         "one pinned OS process per partition over a "
+                         "shared-memory graph store)")
+    ap.add_argument("--nprocs", type=int, default=None,
+                    help="multiproc worker count (must equal "
+                         "partition.nparts; 0/omitted = nparts); alias for "
+                         "--set exec.nprocs=N")
     # lm options
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--batch", type=int, default=4)

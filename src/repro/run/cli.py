@@ -44,6 +44,7 @@ LEGACY_ALIASES: Dict[str, Union[str, Tuple[str, ...]]] = {
     "hidden": "model.hidden_dim",
     "lp": "model.label_prop",
     "mode": "exec.mode",
+    "nprocs": "exec.nprocs",
     "epochs": "exec.epochs",
     "lr": "exec.lr",
     "seed": ("graph.seed", "partition.seed", "exec.seed"),

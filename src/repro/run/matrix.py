@@ -44,11 +44,16 @@ def run_matrix(spec_dir: Path, compile_step: bool = False,
             rec["hash"] = spec.content_hash()
             rec["describe"] = spec.describe()
             session = build_session(spec)
-            lowered = session.lower()
-            rec["lowered_bytes"] = len(lowered.as_text())
-            if compile_step:
-                lowered.compile()
-                rec["compiled"] = True
+            if spec.exec.mode == "multiproc":
+                # No lowered module to inspect: the dry-run equivalent is
+                # the shared-store + mailbox accounting (no processes).
+                rec["store"] = session.trainer.dry_plan()
+            else:
+                lowered = session.lower()
+                rec["lowered_bytes"] = len(lowered.as_text())
+                if compile_step:
+                    lowered.compile()
+                    rec["compiled"] = True
         except Exception as e:
             rec["status"] = "error"
             rec["error"] = f"{type(e).__name__}: {e}"

@@ -20,7 +20,6 @@ always semantically identical to a rebuild).
 
 from __future__ import annotations
 
-import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -28,6 +27,21 @@ import numpy as np
 
 import repro.run.sources as sources  # populates the registries on import
 from repro.run.spec import GRAPH_SOURCES, FEATURE_SOURCES, RunSpec
+
+
+def stage_hlo_payload_bytes(rows: int, feat: int, bits: int) -> float:
+    """One direction's per-device all-to-all payload bytes for a
+    ``[rows, feat]`` wire buffer: fp32 rows, or int32 quant holders
+    (sub-byte payloads ship in i32 until XLA packs them) plus the two
+    fp32 (zero, scale) params per ``ROW_GROUP`` rows when the stage
+    quantizes. A partial trailing row group still ships a full (zero,
+    scale) pair — ceil-div, not floor."""
+    from repro.quant.stochastic import ROW_GROUP
+
+    payload = rows * feat * 4.0
+    if bits:
+        payload += 2.0 * (-(-rows // ROW_GROUP)) * 4.0
+    return payload
 
 
 def build_graph(spec: RunSpec) -> Tuple[Any, np.ndarray]:
@@ -85,12 +99,11 @@ class BuildCache:
 
     @staticmethod
     def _graph_key(spec: RunSpec) -> str:
-        return json.dumps(spec.graph.to_dict(), sort_keys=True)
+        return spec.graph.content_hash()
 
     @staticmethod
     def _part_key(spec: RunSpec) -> str:
-        return json.dumps([spec.graph.to_dict(), spec.partition.to_dict()],
-                          sort_keys=True)
+        return f"{spec.graph.content_hash()}|{spec.partition.content_hash()}"
 
     def graph(self, spec: RunSpec) -> Tuple[Any, np.ndarray]:
         key = self._graph_key(spec)
@@ -177,8 +190,6 @@ class Session:
         (zero, scale) params per ``ROW_GROUP`` rows when the stage
         quantizes. The grouped inter stage wires only its 1/W shard.
         """
-        from repro.quant.stochastic import ROW_GROUP
-
         cfg = self.trainer.cfg
         feats = cfg.dims()[: cfg.num_layers]
         out: Dict[str, float] = {}
@@ -189,12 +200,9 @@ class Session:
             topo = self.schedule.topo(stage)
             if topo.kind == "grouped":
                 rows //= topo.shard_size
-            stage_bytes = 0.0
-            for f in feats:
-                payload = rows * f * 4.0
-                if stage.bits:
-                    payload += 2.0 * (rows // ROW_GROUP) * 4.0
-                stage_bytes += 2.0 * payload
+            stage_bytes = sum(
+                2.0 * stage_hlo_payload_bytes(rows, f, stage.bits)
+                for f in feats)
             out[stage.level] = stage_bytes
             total += stage_bytes
         out["total"] = total
@@ -204,7 +212,9 @@ class Session:
         """Compiled executables behind the jitted train step (None when
         this JAX version exposes no counter). The auditor's
         ``retrace-guard`` expects exactly 1 after N epochs."""
-        step = self.trainer._step
+        step = getattr(self.trainer, "_step", None)
+        if step is None:
+            return None  # backends without one jitted step (multiproc)
         if hasattr(step, "_cache_size"):
             return int(step._cache_size())
         return None
@@ -212,12 +222,26 @@ class Session:
     def describe(self) -> str:
         return self.spec.describe()
 
+    def close(self) -> None:
+        """Release backend resources (multiproc: stop the worker fleet and
+        unlink the shared-memory segments). No-op for in-process modes."""
+        close = getattr(self.trainer, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
 
 def build_session(spec: RunSpec, cache: Optional[BuildCache] = None
                   ) -> Session:
     """Lower ``spec`` end to end and return the live :class:`Session`."""
     from repro.core import DistributedTrainer
-    from repro.core.trainer import prepare_distributed
+    from repro.core.trainer import (_lift_worker_data,
+                                    prepare_distributed_host)
 
     spec.validate()
     if cache is not None:
@@ -226,7 +250,14 @@ def build_session(spec: RunSpec, cache: Optional[BuildCache] = None
     else:
         g, x = build_graph(spec)
         pg = build_partition(spec, g)
-    wd = prepare_distributed(g, x, pg)
+    hwd = prepare_distributed_host(g, x, pg)
+    if spec.exec.mode == "multiproc":
+        # The host arrays ARE the runtime's shared store; workers device-
+        # materialize their own slices, the parent never lifts anything.
+        from repro.launch.multiproc import MultiprocRuntime
+        runtime = MultiprocRuntime(spec, hwd)
+        return Session(spec, g, x, pg, hwd, None, runtime)
+    wd = _lift_worker_data(hwd)
     dc = spec.schedule.to_dist_config(spec.partition, lr=spec.exec.lr)
     cfg = spec.model.to_gcn_config(spec.graph, spec.schedule)
     mesh = build_mesh(spec)

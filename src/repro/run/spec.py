@@ -95,6 +95,16 @@ class _SubSpec:
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
+    def content_hash(self) -> str:
+        """Stable short id of this sub-spec's content, prefixed by the
+        spec kind's initials (``gs-`` for GraphSpec, ``ps-``, ``ss-``,
+        ``ms-``, ``es-``) — the per-section analogue of
+        ``RunSpec.content_hash``, used for build-cache keys."""
+        prefix = "".join(c for c in type(self).__name__ if c.isupper()).lower()
+        canon = json.dumps(self.to_dict(), sort_keys=True,
+                           separators=(",", ":"))
+        return f"{prefix}-" + hashlib.sha256(canon.encode()).hexdigest()[:12]
+
     @classmethod
     def from_dict(cls, d: Dict[str, Any], path: str = ""):
         if not isinstance(d, dict):
@@ -301,18 +311,24 @@ class ModelSpec(_SubSpec):
 class ExecSpec(_SubSpec):
     """How the run executes: worker mapping, training length, optimizer."""
 
-    mode: str = "vmap"         # vmap | shard_map
+    mode: str = "vmap"         # vmap | shard_map | multiproc
     epochs: int = 50
     lr: float = 0.01
     seed: int = 0
     log_every: int = 0         # 0 = auto (epochs // 10)
+    nprocs: int = 0            # multiproc only: 0 = partition.nparts
 
     def validate(self) -> None:
-        if self.mode not in ("vmap", "shard_map"):
-            raise SpecError(f"exec.mode must be vmap|shard_map, "
+        if self.mode not in ("vmap", "shard_map", "multiproc"):
+            raise SpecError(f"exec.mode must be vmap|shard_map|multiproc, "
                             f"got {self.mode!r}")
         if self.epochs < 0:
             raise SpecError(f"exec.epochs must be >= 0, got {self.epochs}")
+        if self.nprocs < 0:
+            raise SpecError(f"exec.nprocs must be >= 0, got {self.nprocs}")
+        if self.nprocs and self.mode != "multiproc":
+            raise SpecError("exec.nprocs is only meaningful with "
+                            f"mode='multiproc', got mode={self.mode!r}")
 
 
 @dataclass(frozen=True)
@@ -334,6 +350,13 @@ class RunSpec:
         self.schedule.validate(self.partition)
         self.model.validate()
         self.exec.validate()
+        if (self.exec.mode == "multiproc" and self.exec.nprocs
+                and self.exec.nprocs != self.partition.nparts):
+            raise SpecError(
+                "exec.nprocs: multiproc runs one process per partition; "
+                f"got nprocs={self.exec.nprocs} with "
+                f"partition.nparts={self.partition.nparts} (use 0 to "
+                "inherit nparts)")
         return self
 
     # -- dict / JSON round-trip -------------------------------------------

@@ -162,6 +162,23 @@ class TestGoldenFixtures:
         assert sorted(res["skipped"]) == sorted(STRUCTURAL)
         assert res["findings"] == []
 
+    def test_multiproc_spec_skips_all_module_rules(self):
+        """multiproc runs P OS processes with host mailboxes -- there is
+        no single lowered module to audit, so every module-reading rule
+        (the structural trio AND retrace-guard) must report skipped
+        rather than trying to lower/compile."""
+        d = json.loads(FLAGSHIP.read_text())
+        d["exec"]["mode"] = "multiproc"
+        d["exec"]["nprocs"] = d["partition"]["nparts"]
+        ctx = AuditContext(RunSpec.from_dict(d), spec_name="multiproc")
+        rules = list(STRUCTURAL) + ["retrace-guard"]
+        res = run_rules(ctx, rule_ids=rules)
+        assert res["rule_errors"] == []
+        assert res["ran"] == []
+        assert sorted(res["skipped"]) == sorted(rules)
+        assert res["findings"] == []
+        assert ctx._session is None  # no build (or spawn) happened
+
 
 class TestRegistryAndContext:
     def test_all_five_rules_registered(self):

@@ -79,7 +79,21 @@ class TestContentHash:
         # The stability contract: hashing is canonical-JSON sha256. This
         # value changes iff the spec schema or its defaults change — which
         # invalidates recorded artifacts and should be a conscious act.
-        assert RunSpec().content_hash() == "rs-408ff1e8bfd8"
+        # (PR 7 added exec.nprocs, rehashing from rs-408ff1e8bfd8.)
+        assert RunSpec().content_hash() == "rs-d87a4352cce8"
+
+    def test_sub_spec_hashes(self):
+        # Per-section hashes: kind-prefixed, content-addressed, and only
+        # sensitive to their own section.
+        spec = tiny_spec()
+        assert spec.graph.content_hash().startswith("gs-")
+        assert spec.partition.content_hash().startswith("ps-")
+        assert spec.schedule.content_hash().startswith("ss-")
+        assert spec.model.content_hash().startswith("ms-")
+        assert spec.exec.content_hash().startswith("es-")
+        bumped = spec.with_overrides(["schedule.bits=2"])
+        assert bumped.graph.content_hash() == spec.graph.content_hash()
+        assert bumped.schedule.content_hash() != spec.schedule.content_hash()
 
 
 class TestOverrides:
@@ -159,6 +173,21 @@ class TestValidation:
             RunSpec().with_overrides(["exec.mode=pmap"])
         with pytest.raises(SpecError, match="bits"):
             RunSpec().with_overrides(["schedule.bits=3"])
+
+    def test_nprocs_validation(self):
+        # nprocs is multiproc-only and must match the partition when set.
+        with pytest.raises(SpecError, match="multiproc"):
+            RunSpec().with_overrides(["exec.nprocs=4"])
+        with pytest.raises(SpecError, match="one process per partition"):
+            RunSpec().with_overrides(["partition.nparts=8",
+                                      "exec.mode=multiproc",
+                                      "exec.nprocs=4"])
+        spec = RunSpec().with_overrides(["partition.nparts=4",
+                                         "exec.mode=multiproc",
+                                         "exec.nprocs=4"])
+        assert spec.exec.nprocs == 4
+        assert RunSpec().with_overrides(
+            ["exec.mode=multiproc"]).exec.nprocs == 0  # 0 = inherit nparts
 
 
 class TestLegacyAliases:
@@ -321,6 +350,34 @@ class TestSessionParity:
         l1 = s1.train_epoch()["loss"]
         l2 = build_session(spec).train_epoch()["loss"]
         assert l1 == l2
+
+    def test_build_cache_keys_are_content_hashes(self):
+        # The docstring's promise: cache keys ARE the sub-spec content
+        # hashes stamped into artifacts, not ad-hoc JSON dumps.
+        cache = BuildCache()
+        spec = tiny_spec()
+        assert BuildCache._graph_key(spec) == spec.graph.content_hash()
+        assert BuildCache._part_key(spec) == (
+            f"{spec.graph.content_hash()}|{spec.partition.content_hash()}")
+        build_session(spec, cache=cache)
+        assert set(cache.graphs) == {spec.graph.content_hash()}
+        # A downstream-only change (schedule) shares both stages; a graph
+        # change misses.
+        build_session(spec.with_overrides(["schedule.bits=2"]), cache=cache)
+        assert len(cache.graphs) == 1 and len(cache.partitions) == 1
+        build_session(spec.with_overrides(["graph.seed=9"]), cache=cache)
+        assert len(cache.graphs) == 2 and len(cache.partitions) == 2
+
+    def test_stage_hlo_payload_bytes_ceil_div(self):
+        # Odd row counts still ship a (zero, scale) pair for the partial
+        # trailing ROW_GROUP — ceil-div, not the old floor-div undercount.
+        from repro.run.session import stage_hlo_payload_bytes
+        assert stage_hlo_payload_bytes(8, 4, 0) == 8 * 4 * 4.0
+        assert stage_hlo_payload_bytes(8, 4, 2) == 8 * 4 * 4.0 + 2 * 2 * 4.0
+        # 6 rows = 1 full group + 1 partial -> 2 (zero, scale) pairs.
+        assert stage_hlo_payload_bytes(6, 8, 2) == 6 * 8 * 4.0 + 2 * 2 * 4.0
+        # rows=1: floor-div said 0 quant-param bytes; ceil says 1 pair.
+        assert stage_hlo_payload_bytes(1, 8, 4) == 1 * 8 * 4.0 + 1 * 2 * 4.0
 
     def test_session_lower_and_accounting(self):
         spec = tiny_spec("partition.groups=2")
