@@ -1,3 +1,17 @@
-from repro.checkpoint.ckpt import load_checkpoint, restore_train_state, save_checkpoint
+from repro.checkpoint.ckpt import (
+    CheckpointCorrupt,
+    CheckpointManager,
+    latest_common_step,
+    load_checkpoint,
+    restore_train_state,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "restore_train_state"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "restore_train_state",
+    "CheckpointCorrupt",
+    "CheckpointManager",
+    "latest_common_step",
+]

@@ -673,29 +673,99 @@ class DistributedTrainer:
             return jax.tree_util.tree_map(lambda x: x[0], tree)
         return tree
 
+    def _ensure_cache(self) -> None:
+        """Lazily zero-fill the schedule-owned halo cache (epoch 0 always
+        refreshes, so zeros are never read as data)."""
+        if not self.use_cache or self._cache is not None:
+            return
+        # Layer l exchanges features of width dims()[l] (in_dim for the
+        # first layer, hidden_dim after). Leading dims mirror wd's
+        # stacked worker axes ((P,) flat, (G, W) nested vmap).
+        dims = self.cfg.dims()[: self.cfg.num_layers]
+        self._cache = self.schedule.init_cache(
+            self.wd, dims, lead=self.wd.x.shape[:-2])
+        if self.mode == "shard_map":
+            # Commit the zero-fill to the same sharding the step
+            # returns its cache with; otherwise epoch 2's differently
+            # laid-out inputs compile a second executable.
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            sh = NamedSharding(self.mesh, P(self._data_axes))
+            self._cache = jax.tree_util.tree_map(
+                lambda a: jax.device_put(a, sh), self._cache)
+
     def _step_args(self, key) -> tuple:
-        """Assemble the _step argument tuple (lazily zero-filling the
-        schedule-owned halo cache; epoch 0 always refreshes)."""
+        """Assemble the _step argument tuple."""
         if not self.use_cache:
             return (self.params, self.wd, key)
-        if self._cache is None:
-            # Layer l exchanges features of width dims()[l] (in_dim for the
-            # first layer, hidden_dim after). Leading dims mirror wd's
-            # stacked worker axes ((P,) flat, (G, W) nested vmap).
-            dims = self.cfg.dims()[: self.cfg.num_layers]
-            self._cache = self.schedule.init_cache(
-                self.wd, dims, lead=self.wd.x.shape[:-2])
-            if self.mode == "shard_map":
-                # Commit the zero-fill to the same sharding the step
-                # returns its cache with; otherwise epoch 2's differently
-                # laid-out inputs compile a second executable.
-                from jax.sharding import NamedSharding
-                from jax.sharding import PartitionSpec as P
-                sh = NamedSharding(self.mesh, P(self._data_axes))
-                self._cache = jax.tree_util.tree_map(
-                    lambda a: jax.device_put(a, sh), self._cache)
+        self._ensure_cache()
         return (self.params, self.wd, key, self._cache,
                 jnp.asarray(self.epoch, jnp.int32))
+
+    # -- checkpoint/resume -------------------------------------------------
+
+    def train_state(self) -> Dict:
+        """The resumable state pytree: params, opt state and (for delayed-
+        comm schedules) the per-stage halo cache. Every epoch's RNG key is
+        derived from the epoch number, so this plus ``epoch`` reproduces
+        the uninterrupted trajectory bit-for-bit."""
+        state = {"params": self.params, "opt_state": self.opt_state}
+        if self.use_cache:
+            self._ensure_cache()
+            state["cache"] = self._cache
+        return state
+
+    def save_train_state(self, manager, meta: Optional[Dict] = None):
+        """Snapshot into a :class:`repro.checkpoint.CheckpointManager`
+        at step == epoch (atomic write + retention happen inside)."""
+        m = dict(meta or {})
+        m.setdefault("epoch", self.epoch)
+        m.setdefault("mode", self.mode)
+        return manager.save(self.train_state(), step=self.epoch, meta=m)
+
+    def _state_shardings(self, template: Dict):
+        """Sharding tree matching :meth:`train_state` so a shard_map
+        restore lands arrays exactly where the step expects them (params/
+        opt replicated, cache sharded over the worker axes) — otherwise
+        the next epoch compiles a second executable."""
+        if self.mode != "shard_map":
+            return None
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        rep = NamedSharding(self.mesh, P())
+        sh = {k: jax.tree_util.tree_map(lambda _: rep, v)
+              for k, v in template.items() if k != "cache"}
+        if "cache" in template:
+            data = NamedSharding(self.mesh, P(self._data_axes))
+            sh["cache"] = jax.tree_util.tree_map(lambda _: data,
+                                                 template["cache"])
+        return sh
+
+    def restore_train_state_from(self, manager, step: Optional[int] = None
+                                 ) -> int:
+        """Restore from a manager's checkpoint (the newest valid one when
+        ``step`` is None) and fast-forward ``self.epoch``; returns the
+        restored step. Raises FileNotFoundError when nothing restorable
+        exists."""
+        from repro.checkpoint.ckpt import restore_train_state
+        if step is None:
+            valid = manager.valid_steps()
+            if not valid:
+                raise FileNotFoundError(
+                    f"no valid checkpoint under {manager.dir}")
+            step = valid[-1]
+        template = self.train_state()
+        state, manifest = restore_train_state(
+            manager.path_for(step), template,
+            shardings=self._state_shardings(template))
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        if self.use_cache:
+            self._cache = state["cache"]
+        self.epoch = int(manifest.get("meta", {}).get("epoch",
+                                                      manifest.get("step")
+                                                      or step))
+        return step
 
     def lower_step(self, key=None):
         """Lower (without running) one training step — the dry-run hook.

@@ -1,0 +1,321 @@
+"""Deterministic chaos harness for the fault-tolerant multiproc runtime.
+
+Injects one fault into a multiproc training run and verifies the
+supervisor's recovery end to end against a fail-free baseline:
+
+* ``kill``         — rank R calls ``os._exit(137)`` at the start of the
+                     epoch after ``--at-epoch`` completed epochs (SIGKILL
+                     stand-in; the parent sees a dead process).
+* ``stall``        — rank R sleeps without heartbeating; the parent must
+                     flag the *live* process hung via stale heartbeats.
+* ``ckpt-corrupt`` — the parent flips bytes in rank R's newest on-disk
+                     checkpoint arrays after epoch N, then kills R at the
+                     next epoch: restore must detect the checksum
+                     mismatch and fall back to the previous common step.
+
+Faults are injected deterministically through the worker-side env hook
+(``REPRO_CHAOS_FAULT`` / ``REPRO_CHAOS_RANK`` / ``REPRO_CHAOS_EPOCH``,
+generation 0 only — respawned workers never re-trigger) plus on-disk
+mutation for ``ckpt-corrupt``; nothing is random, so every run of the
+harness reproduces the same failure and the same recovery.
+
+A run passes when the faulted run's per-epoch losses match the
+uninterrupted baseline to ``--tol`` (default 1e-5; in practice the match
+is bitwise, because epoch RNG derives from the epoch number and the
+allreduce is rank-ordered), the recovery event log shows the expected
+detection kind, and zero shared-memory segments leak. The JSON report
+(``--out``, see ``experiments/BENCH_recovery.json``) records spec hash,
+detection latency, restore step, and loss deltas per case; the exit code
+is non-zero when any case fails, so ``make chaos-smoke`` gates on it.
+
+Examples:
+  python -m repro.launch.chaos --fault kill --rank 1 --at-epoch 2
+  python -m repro.launch.chaos --spec specs/multiproc_p4.json \
+      --fault stall --set exec.heartbeat_s=5
+  python -m repro.launch.chaos --fault all --out experiments/BENCH_recovery.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+FAULTS = ("kill", "stall", "ckpt-corrupt")
+DEFAULT_TOL = 1e-5
+
+_CHAOS_ENV = ("REPRO_CHAOS_FAULT", "REPRO_CHAOS_RANK", "REPRO_CHAOS_EPOCH")
+
+# Default workload: the hierarchical P=4 / Int2 / cd=2 configuration (the
+# paper's interesting regime: two-level exchange, quantized inter stage,
+# delayed refresh, overlap) at smoke scale so the full kill/stall/corrupt
+# matrix runs in minutes on CPU.
+_DEFAULT_BASE = [
+    "graph.source=sbm", "graph.nodes=128", "graph.classes=4",
+    "graph.feat_dim=16", "graph.feat_noise=2.0", "graph.homophily=0.8",
+    "graph.norm=mean",
+    "partition.nparts=4", "partition.groups=2",
+    "schedule.bits=2", "schedule.inter_bits=2", "schedule.inter_cd=2",
+    "schedule.overlap=true", "schedule.agg_backend=ell",
+    "model.model=sage", "model.hidden_dim=16", "model.num_layers=2",
+    "model.dropout=0.0", "model.label_prop=true",
+    "exec.mode=multiproc", "exec.nprocs=4", "exec.epochs=6",
+    "exec.ckpt_every=1", "exec.max_restarts=2", "exec.heartbeat_s=5.0",
+]
+
+
+def _default_spec():
+    from repro.run import RunSpec
+    return RunSpec().with_overrides(_DEFAULT_BASE)
+
+
+def _clear_chaos_env() -> None:
+    for k in _CHAOS_ENV:
+        os.environ.pop(k, None)
+
+
+def _set_chaos_env(fault: str, rank: int, epoch: int) -> None:
+    os.environ["REPRO_CHAOS_FAULT"] = fault
+    os.environ["REPRO_CHAOS_RANK"] = str(rank)
+    os.environ["REPRO_CHAOS_EPOCH"] = str(epoch)
+
+
+def _corrupt_npz(path: Path, span: int = 64) -> None:
+    """Flip a byte run in the middle of the arrays file — past the zip
+    header so the mutation lands in array payload and the manifest's
+    sha256 verification (not a zip parse error) catches it."""
+    data = bytearray(path.read_bytes())
+    mid = len(data) // 2
+    for i in range(mid, min(mid + span, len(data))):
+        data[i] ^= 0xFF
+    path.write_bytes(bytes(data))
+
+
+def run_baseline(spec) -> List[float]:
+    """Fail-free per-epoch losses — what every recovery must reproduce."""
+    from repro.run import build_session
+    _clear_chaos_env()
+    s = build_session(spec)
+    losses: List[float] = []
+    try:
+        for _ in range(spec.exec.epochs):
+            losses.append(float(s.train_epoch()["loss"]))
+    finally:
+        s.close()
+    return losses
+
+
+def run_faulted(spec, fault: str, rank: int, at_epoch: int,
+                ckpt_dir: str) -> dict:
+    """One faulted run under supervision; returns the raw observations
+    (losses, recovery events, leaks, abort error if any)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.launch.shm_store import leaked_segments
+    from repro.run import build_session
+
+    # ckpt-corrupt is a two-part fault: the parent mutates the newest
+    # snapshot after epoch N, the env hook kills the same rank one epoch
+    # later so restore is forced through the corrupted step.
+    _set_chaos_env("kill" if fault == "ckpt-corrupt" else fault,
+                   rank, at_epoch)
+    s = build_session(spec)
+    rt = s.trainer
+    rt.configure_ckpt(ckpt_dir, every=max(1, spec.exec.ckpt_every))
+    losses: Dict[int, float] = {}
+    corrupted_step: Optional[int] = None
+    error: Optional[str] = None
+    t0 = time.time()
+    try:
+        while rt.epoch < spec.exec.epochs:
+            m = rt.train_epoch()
+            losses[rt.epoch] = float(m["loss"])
+            if (fault == "ckpt-corrupt" and corrupted_step is None
+                    and rt.epoch >= at_epoch):
+                mgr = CheckpointManager(Path(ckpt_dir) / f"rank{rank}")
+                corrupted_step = mgr.latest()
+                _corrupt_npz(mgr.path_for(corrupted_step).with_suffix(".npz"))
+    except RuntimeError as e:
+        error = str(e)
+    finally:
+        events = [dict(ev) for ev in rt.recovery_events]
+        token = getattr(rt, "token", None)
+        s.close()
+        _clear_chaos_env()
+    return {
+        "losses": losses,
+        "events": events,
+        "error": error,
+        "corrupted_step": corrupted_step,
+        "leaked_segments": leaked_segments(token) if token else [],
+        "wall_s": round(time.time() - t0, 3),
+    }
+
+
+def evaluate_case(fault: str, rank: int, at_epoch: int, baseline: List[float],
+                  obs: dict, tol: float) -> dict:
+    """Judge one faulted run against the baseline -> report case dict."""
+    events = obs["events"]
+    expect_kind = "hung" if fault == "stall" else "dead"
+    deltas = {e: abs(obs["losses"][e] - baseline[e - 1])
+              for e in obs["losses"] if 1 <= e <= len(baseline)}
+    max_delta = max(deltas.values()) if deltas else None
+    complete = len(obs["losses"]) == len(baseline)
+    checks = {
+        "recovered": obs["error"] is None and complete,
+        "fault_detected": bool(events) and events[0]["kind"] == expect_kind,
+        "faulted_rank_flagged": bool(events) and rank in events[0]["ranks"],
+        "loss_match": complete and max_delta is not None and max_delta <= tol,
+        "no_leaked_segments": obs["leaked_segments"] == [],
+    }
+    if fault == "ckpt-corrupt":
+        # The corrupted snapshot must be skipped: restore lands on the
+        # step *before* the one the parent mutated.
+        checks["fallback_past_corrupt"] = bool(events) and (
+            obs["corrupted_step"] is not None
+            and events[0].get("restore_step") is not None
+            and events[0]["restore_step"] < obs["corrupted_step"])
+    first = events[0] if events else {}
+    return {
+        "fault": fault,
+        "rank": rank,
+        "at_epoch": at_epoch,
+        "ok": all(checks.values()),
+        "checks": checks,
+        "detection_latency_s": first.get("detect_s"),
+        "detection_kind": first.get("kind"),
+        "restarts": max((ev.get("restarts", 0) for ev in events), default=0),
+        "restore_step": first.get("restore_step"),
+        "resume_epoch": first.get("resume_epoch"),
+        "corrupted_step": obs["corrupted_step"],
+        "max_loss_delta": max_delta,
+        "faulted_losses": [obs["losses"].get(e)
+                           for e in range(1, len(baseline) + 1)],
+        "leaked_segments": obs["leaked_segments"],
+        "error": obs["error"],
+        "events": events,
+        "wall_s": obs["wall_s"],
+    }
+
+
+def _case_plan(fault: str, rank: int, at_epoch: int, nprocs: int):
+    """-> [(fault, rank, at_epoch)]: one case, or the full matrix for
+    ``all`` (varying rank/epoch so different ranks and phases are hit)."""
+    if fault != "all":
+        return [(fault, rank, at_epoch)]
+    return [
+        ("kill", rank, at_epoch),
+        ("stall", (rank + 1) % nprocs, at_epoch + 1),
+        ("ckpt-corrupt", rank, max(2, at_epoch)),
+    ]
+
+
+def main(argv=None) -> int:
+    from repro.run import add_spec_args, spec_from_args
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.chaos",
+        description="deterministic fault injection + recovery verification "
+                    "for the multiproc runtime")
+    add_spec_args(ap)
+    ap.add_argument("--fault", choices=FAULTS + ("all",), default="all",
+                    help="fault to inject (all = kill/stall/ckpt-corrupt "
+                         "matrix against one shared baseline)")
+    ap.add_argument("--rank", type=int, default=1,
+                    help="rank the fault targets (default 1)")
+    ap.add_argument("--at-epoch", dest="at_epoch", type=int, default=2,
+                    help="completed epochs before the fault fires "
+                         "(default 2; must leave >=1 epoch after recovery)")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="max per-epoch |loss - baseline| for a pass")
+    ap.add_argument("--ckpt-dir", type=str, default=None,
+                    help="checkpoint root (default: a private tempdir "
+                         "per case, removed afterwards)")
+    ap.add_argument("--out", type=str, default=None, metavar="REPORT.json",
+                    help="write the recovery report here "
+                         "(e.g. experiments/BENCH_recovery.json)")
+    args = ap.parse_args(argv)
+
+    spec = spec_from_args(args, base=_default_spec(), aliases={})
+    if spec.exec.mode != "multiproc":
+        raise SystemExit("chaos targets the multiproc runtime; pass "
+                         "--set exec.mode=multiproc (and exec.nprocs)")
+    fixes = []
+    if spec.exec.ckpt_every < 1:
+        fixes.append("exec.ckpt_every=1")
+    if spec.exec.max_restarts < 1:
+        fixes.append("exec.max_restarts=2")
+    if spec.exec.heartbeat_s <= 0:
+        fixes.append("exec.heartbeat_s=5.0")
+    if fixes:
+        print(f"chaos: forcing {' '.join(fixes)}")
+        spec = spec.with_overrides(fixes)
+    nprocs = spec.exec.nprocs or spec.partition.nparts
+    plan = _case_plan(args.fault, args.rank, args.at_epoch, nprocs)
+    for f, r, at in plan:
+        if not (0 <= r < nprocs):
+            raise SystemExit(f"--rank {r} out of range for nprocs={nprocs}")
+        if not (1 <= at < spec.exec.epochs - (1 if f == "ckpt-corrupt"
+                                              else 0)):
+            raise SystemExit(f"--at-epoch {at} leaves no epoch to recover "
+                             f"into (epochs={spec.exec.epochs})")
+
+    print(f"spec: {spec.describe()}")
+    print(f"chaos plan: {[(f, r, at) for f, r, at in plan]}")
+    t0 = time.time()
+    print("baseline: fail-free run ...")
+    baseline = run_baseline(spec)
+    print("baseline losses: " + " ".join(f"{x:.6f}" for x in baseline))
+
+    cases = []
+    for f, r, at in plan:
+        print(f"case {f}: rank {r} after epoch {at} ...")
+        if args.ckpt_dir:
+            d = Path(args.ckpt_dir) / f.replace("-", "_")
+            d.mkdir(parents=True, exist_ok=True)
+            obs = run_faulted(spec, f, r, at, str(d))
+        else:
+            with tempfile.TemporaryDirectory(prefix="chaos-ckpt-") as d:
+                obs = run_faulted(spec, f, r, at, d)
+        case = evaluate_case(f, r, at, baseline, obs, args.tol)
+        cases.append(case)
+        status = "OK" if case["ok"] else "FAIL " + str(
+            [k for k, v in case["checks"].items() if not v])
+        lat = case["detection_latency_s"]
+        print(f"  -> {status}: detected {case['detection_kind']} in "
+              f"{lat if lat is None else round(lat, 3)}s, restored step "
+              f"{case['restore_step']}, max loss delta "
+              f"{case['max_loss_delta']}")
+
+    report = {
+        "bench": "multiproc_fault_recovery",
+        "generated_unix": int(t0),
+        "spec_hash": spec.content_hash(),
+        "spec": spec.describe(),
+        "nprocs": nprocs,
+        "epochs": spec.exec.epochs,
+        "heartbeat_s": spec.exec.heartbeat_s,
+        "ckpt_every": max(1, spec.exec.ckpt_every),
+        "max_restarts": spec.exec.max_restarts,
+        "tol": args.tol,
+        "baseline_losses": baseline,
+        "cases": cases,
+        "ok": all(c["ok"] for c in cases),
+        "wall_s": round(time.time() - t0, 3),
+    }
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=1) + "\n")
+        print(f"report -> {out}")
+    print(f"chaos: {'ALL OK' if report['ok'] else 'FAILURES'} "
+          f"({sum(c['ok'] for c in cases)}/{len(cases)} cases, "
+          f"{report['wall_s']}s)")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -45,6 +45,15 @@ posts precede its reads, and the per-epoch gradient all-reduce is a full
 barrier — so the wire is deadlock-free and slot reuse across epochs is
 safe. The all-reduce sums contributions in rank order on every rank, so
 optimizer states stay bitwise identical with no broadcast.
+
+Fault tolerance (:class:`MultiprocRuntime` docstring has the protocol):
+per-rank heartbeat words let the parent tell dead / hung / failing
+workers apart; on failure it quiesces survivors through the RECOVER
+control word, respawns the lost ranks against the existing segments,
+restores everyone from the newest per-rank checkpoint step all ranks
+hold, and retries — degrading to a clean abort (segments unlinked,
+checkpoints preserved) after ``exec.max_restarts`` recoveries. The
+deterministic chaos harness (``repro.launch.chaos``) drives this path.
 """
 
 from __future__ import annotations
@@ -52,8 +61,10 @@ from __future__ import annotations
 import functools
 import multiprocessing as mp
 import os
+import signal
 import time
 import traceback
+from pathlib import Path
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
@@ -62,6 +73,11 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro.checkpoint.ckpt import (
+    CheckpointManager,
+    latest_common_step,
+    restore_train_state,
+)
 from repro.core import model as M
 from repro.core.exchange import (
     DeviceHaloPlan,
@@ -78,6 +94,7 @@ from repro.launch.shm_store import (
     Mailboxes,
     ShmArena,
     TransportAborted,
+    TransportRecover,
     TransportTimeout,
     plan_mailbox,
     publish_store,
@@ -90,6 +107,55 @@ _THREAD_ENV = ("OMP_NUM_THREADS", "OPENBLAS_NUM_THREADS", "MKL_NUM_THREADS")
 _BWD_KEY_FOLD = 0x5BD1  # must match exchange._quantized_exchange_bwd
 _WORKER_WAIT_S = 600.0  # mailbox spin deadline (1-core containers are slow)
 _PARENT_WAIT_S = 900.0  # parent deadline per command round
+_RECOVER_DRAIN_S = 120.0  # per-round deadline quiescing survivors
+_COLD_GRACE_S = 300.0  # hang deadline for a rank's first command: a fresh
+# worker compiles its whole first epoch before the mailbox ops that bump
+# its heartbeat, and must not read as hung at tight heartbeat_s settings
+_CHAOS_STALL_S = 3600.0  # a chaos "stall" sleeps this long (heartbeat-free)
+
+# Deterministic fault injection (launch.chaos): a worker whose rank matches
+# REPRO_CHAOS_RANK fires REPRO_CHAOS_FAULT (kill | stall) at the start of
+# the train_epoch that follows REPRO_CHAOS_EPOCH completed epochs — but
+# only on spawn generation 0, so a respawned worker never re-triggers.
+_CHAOS_ENV = ("REPRO_CHAOS_FAULT", "REPRO_CHAOS_RANK", "REPRO_CHAOS_EPOCH")
+
+
+def _chaos_from_env(rank: int, generation: int) -> Optional[dict]:
+    fault = os.environ.get("REPRO_CHAOS_FAULT")
+    if not fault or generation != 0:
+        return None
+    if int(os.environ.get("REPRO_CHAOS_RANK", "0")) != rank:
+        return None
+    return {"fault": fault,
+            "epoch": int(os.environ.get("REPRO_CHAOS_EPOCH", "1"))}
+
+
+def _transport_kind(e: BaseException) -> Optional[str]:
+    """Classify an exception escaping a worker command: "recover" /
+    "abort" / "timeout" transport conditions, else None (a real error).
+    The transports fire inside ``jax.pure_callback``, which may re-raise
+    them wrapped (XlaRuntimeError), so walk the cause/context chain and
+    fall back to matching the rendered message."""
+    seen, stack = set(), [e]
+    while stack:
+        x = stack.pop()
+        if x is None or id(x) in seen:
+            continue
+        seen.add(id(x))
+        if isinstance(x, TransportRecover):
+            return "recover"
+        if isinstance(x, TransportAborted):
+            return "abort"
+        if isinstance(x, TransportTimeout):
+            return "timeout"
+        stack += [x.__cause__, x.__context__]
+    s = repr(e)
+    for name, kind in (("TransportRecover", "recover"),
+                       ("TransportAborted", "abort"),
+                       ("TransportTimeout", "timeout")):
+        if name in s:
+            return kind
+    return None
 
 
 # --------------------------------------------------------------------------
@@ -649,12 +715,24 @@ def _rank_plan(views: Dict[str, np.ndarray], prefix: str, plan_meta: dict,
 
 
 class _RankWorker:
-    """One rank's training state, rebuilt from the manifest + shared store."""
+    """One rank's training state, rebuilt from the manifest + shared store.
 
-    def __init__(self, rank: int, nprocs: int, manifest: dict):
+    ``generation`` counts respawns of this rank (0 = original spawn); a
+    respawned worker reattaches the *existing* segments — the store is
+    never republished — so recovery costs O(one worker boot), not
+    O(rebuild). When the manifest carries a ``ckpt`` section the worker
+    snapshots its resumable state per epoch period into a per-rank
+    :class:`CheckpointManager` directory, and the parent's ``restore``
+    command winds the state back to a step every rank holds.
+    """
+
+    def __init__(self, rank: int, nprocs: int, manifest: dict,
+                 generation: int = 0):
         from repro.run.spec import RunSpec
 
         self.rank, self.nprocs = rank, nprocs
+        self.generation = generation
+        self._chaos = _chaos_from_env(rank, generation)
         spec = RunSpec.from_dict(manifest["spec"])
         self.spec = spec
         self.dc = spec.schedule.to_dist_config(spec.partition,
@@ -705,6 +783,11 @@ class _RankWorker:
         dims = self.cfg.dims()[: self.cfg.num_layers]
         self.cache = (self.schedule.init_cache(self.wd, dims, lead=())
                       if self.schedule.uses_cache else None)
+        ck = meta.get("ckpt")
+        self.ckpt_every = int(ck["every"]) if ck else 0
+        self.ckpt_mgr = (CheckpointManager(
+            Path(ck["dir"]) / f"rank{rank}", keep=int(ck.get("keep", 3)))
+            if ck else None)
         wire_rows = meta["wire_rows"]
         self._progs: Dict[str, List[_MpLayerProgram]] = {}
         for tag, sched in (("t", self.schedule), ("e", self.eval_schedule)):
@@ -755,7 +838,19 @@ class _RankWorker:
                            prop_mask, agg_fn, train=train, dropout_key=kd)
         return logits, new_cache
 
+    def _maybe_chaos(self) -> None:
+        """Fire a pending env-injected fault (see ``_chaos_from_env``)."""
+        if self._chaos is None or self.epoch != self._chaos["epoch"]:
+            return
+        if self._chaos["fault"] == "kill":
+            os._exit(137)  # simulated crash: no cleanup, no reply
+        if self._chaos["fault"] == "stall":
+            # Simulated hang: sleep without touching the mailbox, so this
+            # rank's heartbeat freezes while the process stays alive.
+            time.sleep(_CHAOS_STALL_S)
+
     def train_epoch(self) -> dict:
+        self._maybe_chaos()
         t0 = time.perf_counter()
         wait0, bytes0 = self.mb.wait_s, self.mb.bytes_written
         epoch = self.epoch
@@ -801,11 +896,57 @@ class _RankWorker:
             self.cache = cache_out
         self.epoch += 1
         jax.block_until_ready(self.params)
+        self.mb.heartbeat()  # the optimizer tail has no mailbox ops
+        if (self.ckpt_mgr is not None and self.ckpt_every
+                and self.epoch % self.ckpt_every == 0):
+            self.ckpt_mgr.save(self._ckpt_state(), step=self.epoch,
+                               meta={"epoch": self.epoch, "rank": self.rank})
+            self.mb.heartbeat()
         return {"loss": gls / max(gcnt2, 1.0),
                 "train_acc": gcorrect / max(gcnt2, 1.0),
+                "epoch": self.epoch,
                 "epoch_s": time.perf_counter() - t0,
                 "wait_s": self.mb.wait_s - wait0,
                 "wire_bytes": self.mb.bytes_written - bytes0}
+
+    # -- checkpoint/restore -------------------------------------------------
+
+    def _ckpt_state(self) -> dict:
+        """The resumable pytree: params, opt state and (delayed-comm
+        schedules) the per-stage halo cache. All per-epoch RNG derives
+        from the epoch number and the gradient all-reduce accumulates in
+        rank order on every rank, so restoring this at epoch E reproduces
+        the uninterrupted trajectory bit-for-bit from E on."""
+        state = {"params": self.params, "opt_state": self.opt_state}
+        if self.schedule.uses_cache:
+            state["cache"] = self.cache
+        return state
+
+    def restore(self, step: Optional[int]) -> dict:
+        """Wind back to checkpoint ``step`` (or reinit from scratch when
+        None / unconfigured) and clear the per-op mailbox counts — the
+        worker half of the parent's recovery protocol, whose
+        ``reset_counts`` zeroed the shared words while the fleet was
+        quiesced."""
+        self.mb.reset_local()
+        if self.ckpt_mgr is not None and step is not None:
+            template = self._ckpt_state()
+            state, manifest = restore_train_state(
+                self.ckpt_mgr.path_for(step), template)
+            self.params = state["params"]
+            self.opt_state = state["opt_state"]
+            if self.schedule.uses_cache:
+                self.cache = state["cache"]
+            self.epoch = int(manifest.get("meta", {}).get("epoch", step))
+        else:
+            self.params = M.init_params(
+                jax.random.PRNGKey(self.spec.exec.seed), self.cfg)
+            self.opt_state = adamw_init(self.params)
+            if self.schedule.uses_cache:
+                dims = self.cfg.dims()[: self.cfg.num_layers]
+                self.cache = self.schedule.init_cache(self.wd, dims, lead=())
+            self.epoch = 0
+        return {"epoch": self.epoch}
 
     def evaluate(self) -> dict:
         prop = (self.wd.train_mask if self.cfg.label_prop
@@ -832,41 +973,71 @@ class _RankWorker:
         self.arena.close()
 
 
-def _worker_entry(rank: int, nprocs: int, manifest: dict, conn) -> None:
-    """Spawned-process entry: pin, attach the shared store, serve commands."""
+def _safe_send(conn, msg: dict) -> bool:
+    try:
+        conn.send(msg)
+        return True
+    except (OSError, ValueError, BrokenPipeError):
+        return False  # parent gone; caller unwinds
+
+
+def _worker_entry(rank: int, nprocs: int, manifest: dict, conn,
+                  generation: int = 0) -> None:
+    """Spawned-process entry: pin, attach the shared store, serve commands.
+
+    Command exceptions are classified (``_transport_kind``) instead of
+    killing the worker: a RECOVER flag means the parent is running fault
+    recovery — reply ``{"status": "recover"}`` and stay in the loop to
+    await the restore command; a real error or a transport timeout is
+    reported and the worker *stays alive* so the supervisor decides
+    (respawn via kill, or abort by closing the pipe). Only an abort flag
+    or a lost parent ends the loop.
+    """
     worker = None
     try:
         _pin(rank, nprocs)
-        worker = _RankWorker(rank, nprocs, manifest)
+        worker = _RankWorker(rank, nprocs, manifest, generation=generation)
         conn.send({"status": "ok", **worker.summary()})
         while True:
-            msg = conn.recv()
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                break
             cmd = msg.get("cmd")
-            if cmd == "stop":
-                break
-            if cmd == "epoch":
-                conn.send({"status": "ok", **worker.train_epoch()})
-            elif cmd == "eval":
-                conn.send({"status": "ok", **worker.evaluate()})
-            elif cmd == "summary":
-                conn.send({"status": "ok", **worker.summary()})
-            else:
-                conn.send({"status": "error",
-                           "error": f"unknown command {cmd!r}"})
-                break
-    except (TransportAborted, TransportTimeout, EOFError) as e:
-        try:
-            conn.send({"status": "error",
-                       "error": f"{type(e).__name__}: {e}"})
-        except (OSError, ValueError, BrokenPipeError):
-            pass
+            try:
+                if cmd == "stop":
+                    break
+                if cmd == "epoch":
+                    rep = {"status": "ok", **worker.train_epoch()}
+                elif cmd == "eval":
+                    rep = {"status": "ok", **worker.evaluate()}
+                elif cmd == "summary":
+                    rep = {"status": "ok", **worker.summary()}
+                elif cmd == "restore":
+                    rep = {"status": "ok", **worker.restore(msg.get("step"))}
+                else:
+                    _safe_send(conn, {"status": "error",
+                                      "error": f"unknown command {cmd!r}"})
+                    break
+                if not _safe_send(conn, rep):
+                    break
+            except Exception as e:  # noqa: BLE001 — classify, don't die
+                kind = _transport_kind(e)
+                if kind == "recover":
+                    if not _safe_send(conn, {"status": "recover"}):
+                        break
+                    continue
+                detail = (f"{type(e).__name__}: {e}" if kind else
+                          f"{type(e).__name__}: {e}\n"
+                          f"{traceback.format_exc()}")
+                if not _safe_send(conn, {"status": "error", "error": detail}):
+                    break
+                if kind == "abort":
+                    break
     except Exception as e:  # noqa: BLE001 — report, don't hang the parent
-        try:
-            conn.send({"status": "error",
-                       "error": f"{type(e).__name__}: {e}\n"
-                                f"{traceback.format_exc()}"})
-        except (OSError, ValueError, BrokenPipeError):
-            pass
+        _safe_send(conn, {"status": "error",
+                          "error": f"{type(e).__name__}: {e}\n"
+                                   f"{traceback.format_exc()}"})
     finally:
         if worker is not None:
             worker.close()
@@ -932,16 +1103,46 @@ def _arena_arrays(hwd) -> Tuple[Dict[str, np.ndarray], dict]:
     return arrays, meta
 
 
+class _WorkerFailure(Exception):
+    """Internal detection signal: ranks failed (dead / hung / failing)
+    while the parent waited on ``pending`` ranks' replies."""
+
+    def __init__(self, ranks: Sequence[int], kind: str,
+                 pending: Sequence[int] = (), detect_s: float = 0.0,
+                 errors: Optional[Dict[int, str]] = None):
+        self.ranks = sorted(set(ranks))
+        self.kind = kind
+        self.pending = sorted(set(pending) - set(ranks))
+        self.detect_s = detect_s
+        self.errors = errors or {}
+        super().__init__(f"ranks {self.ranks} {kind}")
+
+
 class MultiprocRuntime:
     """P real processes over one shared graph store — the trainer-shaped
-    driver behind ``ExecSpec.mode="multiproc"``.
+    driver behind ``ExecSpec.mode="multiproc"``, with a fault-tolerant
+    supervisor.
 
     Lazy: the store is published and the workers spawn on the first
     train/eval command, so spec-level accounting (:meth:`dry_plan`) costs
-    no processes. Fatal worker conditions (death, transport error,
-    timeout) abort the run: the parent flips the mailbox abort flag so
-    survivors unblock, terminates the fleet, unlinks both segments and
-    raises ``RuntimeError``.
+    no processes.
+
+    Supervision: while waiting on a command's replies the parent
+    distinguishes a **dead** rank (exitcode / hung-up pipe), a **hung**
+    rank (its heartbeat word frozen past ``exec.heartbeat_s`` while the
+    process is alive) and a **failing** rank (an error-status reply). On
+    any of these it runs the recovery protocol — flip the mailbox control
+    word to RECOVER so blocked survivors unwind to their command loop,
+    drain their in-flight replies, kill and respawn the lost ranks against
+    the *existing* segments (O(respawn), nothing republished), zero the
+    wire counters, restore every rank from the newest checkpoint step all
+    ranks hold (:meth:`configure_ckpt`; from-scratch reinit when none) and
+    retry the command. After ``exec.max_restarts`` recoveries the runtime
+    degrades to a clean abort: survivors unblocked via the abort flag,
+    fleet terminated, both segments unlinked, the latest checkpoints left
+    on disk, and ``RuntimeError`` raised. Each recovery is appended to
+    ``recovery_events`` (kind, ranks, detection latency, restore step) —
+    the chaos harness's report source.
     """
 
     def __init__(self, spec, hwd):
@@ -974,39 +1175,142 @@ class MultiprocRuntime:
         self._arena: Optional[ShmArena] = None
         self._mb: Optional[Mailboxes] = None
         self.ready_stats: List[dict] = []
+        # Supervision state
+        self.restarts = 0
+        self.recovery_events: List[dict] = []
+        self._recovering = False
+        self._generation = 0
+        self._ckpt: Optional[dict] = None
+        self._manifest: Optional[dict] = None
+        self._ctx = None
+        self._signals_installed = False
+        # Ranks that have completed a supervised command since (re)spawn:
+        # only they get the tight heartbeat_s hang deadline (cold ranks
+        # are still compiling; see _COLD_GRACE_S).
+        self._warm_ranks: set = set()
+
+    # -- checkpoint configuration ------------------------------------------
+
+    def configure_ckpt(self, directory, every: int = 1, keep: int = 3
+                       ) -> None:
+        """Point the fleet at a checkpoint directory (per-rank subdirs
+        ``rank{r}/``) with snapshot period ``every`` epochs. Must run
+        before the first command spawns the workers — the directory rides
+        in the spawn manifest."""
+        if self._started:
+            raise RuntimeError(
+                "configure_ckpt must be called before the fleet starts")
+        self._ckpt = {"dir": str(directory), "every": int(every),
+                      "keep": int(keep)}
+
+    def _rank_managers(self) -> Dict[int, CheckpointManager]:
+        assert self._ckpt is not None
+        return {r: CheckpointManager(Path(self._ckpt["dir"]) / f"rank{r}",
+                                     keep=self._ckpt["keep"])
+                for r in range(self.nprocs)}
+
+    def _latest_common_step(self) -> Optional[int]:
+        if self._ckpt is None:
+            return None
+        return latest_common_step(self._rank_managers())
+
+    def restore_from_ckpt(self) -> int:
+        """Explicit resume: restore every rank from the newest step all
+        ranks hold a valid checkpoint for. Aborts cleanly (fleet down,
+        segments unlinked) when no common valid step exists."""
+        if self._ckpt is None:
+            raise RuntimeError("restore_from_ckpt needs configure_ckpt "
+                               "first (no checkpoint directory)")
+        self._ensure_started()
+        step = self._latest_common_step()
+        if step is None:
+            self._abort("resume requested but no checkpoint step is valid "
+                        f"on every rank under {self._ckpt['dir']}")
+        try:
+            self._send({"cmd": "restore", "step": step}, "restore",
+                       range(self.nprocs))
+            reps = self._gather(_PARENT_WAIT_S, "restore")
+        except _WorkerFailure as f:
+            self._abort(f"restore failed: {f}")
+        self.epoch = int(reps[0]["epoch"])
+        return step
 
     # -- lifecycle ---------------------------------------------------------
 
-    def _ensure_started(self) -> None:
-        if self._started:
-            return
-        self.token = run_token()
-        self._arena, self._mb, frag = publish_store(
-            self.token, self._arrays, self._op_table)
-        manifest = {"spec": self.spec.to_dict(), "meta": self._meta, **frag}
-        ctx = mp.get_context("spawn")
+    def _spawn_rank(self, r: int) -> None:
+        """Spawn (or respawn) one rank against the already-published
+        segments, with the thread env partitioned across ranks."""
         threads = max(1, (os.cpu_count() or 1) // self.nprocs)
         saved = {k: os.environ.get(k) for k in _THREAD_ENV}
         for k in _THREAD_ENV:
             os.environ[k] = str(threads)
         try:
-            for r in range(self.nprocs):
-                parent_conn, child_conn = ctx.Pipe()
-                p = ctx.Process(target=_worker_entry,
-                                args=(r, self.nprocs, manifest, child_conn),
-                                daemon=True)
-                p.start()
-                child_conn.close()
-                self._procs.append(p)
-                self._conns.append(parent_conn)
+            parent_conn, child_conn = self._ctx.Pipe()
+            p = self._ctx.Process(
+                target=_worker_entry,
+                args=(r, self.nprocs, self._manifest, child_conn,
+                      self._generation),
+                daemon=True)
+            p.start()
+            child_conn.close()
+            self._procs[r] = p
+            self._conns[r] = parent_conn
+            self._warm_ranks.discard(r)
         finally:
             for k, v in saved.items():
                 if v is None:
                     os.environ.pop(k, None)
                 else:
                     os.environ[k] = v
+
+    def _install_signal_cleanup(self) -> None:
+        """SIGINT/SIGTERM tear the fleet down and unlink both segments
+        before the default disposition runs (atexit alone never fires on
+        SIGTERM). Chained to any previously-installed handler."""
+        if self._signals_installed:
+            return
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            prev = signal.getsignal(sig)
+
+            def _handler(signum, frame, prev=prev):
+                self.close(force=True)
+                if callable(prev) and prev not in (signal.SIG_IGN,
+                                                   signal.SIG_DFL):
+                    prev(signum, frame)
+                else:
+                    signal.signal(signum, signal.SIG_DFL)
+                    os.kill(os.getpid(), signum)
+
+            try:
+                signal.signal(sig, _handler)
+            except ValueError:
+                return  # not the main thread; atexit still covers segments
+        self._signals_installed = True
+
+    def _ensure_started(self) -> None:
+        if self._started:
+            return
+        self.token = run_token()
+        self._arena, self._mb, frag = publish_store(
+            self.token, self._arrays, self._op_table, nprocs=self.nprocs)
+        meta = dict(self._meta)
+        if self._ckpt is not None:
+            meta["ckpt"] = self._ckpt
+        self._manifest = {"spec": self.spec.to_dict(), "meta": meta, **frag}
+        self._ctx = mp.get_context("spawn")
+        self._procs = [None] * self.nprocs
+        self._conns = [None] * self.nprocs
+        for r in range(self.nprocs):
+            self._spawn_rank(r)
         self._started = True
-        self.ready_stats = self._gather(_PARENT_WAIT_S, "startup")
+        self._install_signal_cleanup()
+        try:
+            reps = self._gather(_PARENT_WAIT_S, "startup")
+        except _WorkerFailure as f:
+            self._abort(f"startup failed: {f}"
+                        + "".join(f"\n  rank {r}: {e}"
+                                  for r, e in f.errors.items()))
+        self.ready_stats = [reps[r] for r in range(self.nprocs)]
 
     def _abort(self, msg: str) -> None:
         if self._mb is not None:
@@ -1014,54 +1318,194 @@ class MultiprocRuntime:
         self.close(force=True)
         raise RuntimeError(f"multiproc run aborted: {msg}")
 
-    def _gather(self, timeout: float, what: str) -> List[dict]:
-        deadline = time.monotonic() + timeout
-        replies: List[Optional[dict]] = [None] * self.nprocs
-        pending = set(range(self.nprocs))
+    # -- detection + recovery ----------------------------------------------
+
+    def _gather(self, timeout: float, what: str,
+                ranks: Optional[Sequence[int]] = None, hb_s: float = 0.0,
+                ok_status: Tuple[str, ...] = ("ok",)) -> Dict[int, dict]:
+        """Collect one reply per rank; raise :class:`_WorkerFailure` the
+        moment any awaited rank proves dead, hung (heartbeat frozen past
+        ``hb_s``; 0 disables) or failing (reply outside ``ok_status``)."""
+        ranks = list(range(self.nprocs)) if ranks is None else list(ranks)
+        t0 = time.monotonic()
+        deadline = t0 + timeout
+        replies: Dict[int, dict] = {}
+        pending = set(ranks)
+        hb_last: Dict[int, Tuple[int, float]] = {}
+        if hb_s > 0 and self._mb is not None:
+            hbs = self._mb.heartbeats()
+            hb_last = {r: (hbs[r], t0) for r in pending if r < len(hbs)}
+
+        def fail(rs, kind):
+            raise _WorkerFailure(
+                rs, kind, pending=pending, detect_s=time.monotonic() - t0)
+
         while pending:
             for r in sorted(pending):
                 try:
-                    if self._conns[r].poll(0.05):
+                    if self._conns[r] is not None and self._conns[r].poll(0.05):
                         replies[r] = self._conns[r].recv()
                         pending.discard(r)
                 except (EOFError, OSError):
-                    self._abort(f"worker {r} hung up during {what}")
-            dead = [r for r in pending if not self._procs[r].is_alive()]
+                    fail([r], "dead")
+            dead = [r for r in pending
+                    if self._procs[r] is None
+                    or not self._procs[r].is_alive()]
             if dead:
-                self._abort(f"worker {dead[0]} died during {what}")
+                fail(dead, "dead")
+            if hb_last:
+                now = time.monotonic()
+                hbs = self._mb.heartbeats()
+                hung = []
+                for r in sorted(pending & set(hb_last)):
+                    v, t = hb_last[r]
+                    limit = (hb_s if r in self._warm_ranks
+                             else max(hb_s, _COLD_GRACE_S))
+                    if hbs[r] != v:
+                        hb_last[r] = (hbs[r], now)
+                    elif now - t > limit:
+                        hung.append(r)
+                if hung:
+                    fail(hung, "hung")
             if time.monotonic() > deadline:
-                self._abort(f"timed out after {timeout:.0f}s in {what} "
-                            f"(waiting on ranks {sorted(pending)})")
-        for r, rep in enumerate(replies):
-            if rep.get("status") != "ok":
-                self._abort(f"worker {r} failed during {what}: "
-                            f"{rep.get('error', 'no detail')}")
+                fail(sorted(pending), "hung")
+        bad = [r for r in ranks if replies[r].get("status") not in ok_status]
+        if bad:
+            raise _WorkerFailure(
+                bad, "failing", detect_s=time.monotonic() - t0,
+                errors={r: str(replies[r].get("error", "no detail"))
+                        for r in bad})
         return replies
 
-    def _command(self, msg: dict, what: str,
-                 timeout: float = _PARENT_WAIT_S) -> List[dict]:
-        self._ensure_started()
-        for r, c in enumerate(self._conns):
+    def _send(self, msg: dict, what: str, ranks: Sequence[int]) -> None:
+        sent: List[int] = []
+        for r in ranks:
             try:
-                c.send(msg)
-            except (BrokenPipeError, OSError):
-                self._abort(f"worker {r} unreachable sending {what}")
-        return self._gather(timeout, what)
+                self._conns[r].send(msg)
+            except (BrokenPipeError, OSError, AttributeError):
+                raise _WorkerFailure([r], "dead", pending=sent)
+            sent.append(r)
+
+    def _command(self, msg: dict, what: str,
+                 timeout: float = _PARENT_WAIT_S,
+                 supervised: bool = False) -> List[dict]:
+        """Send ``msg`` to every rank and gather replies; with
+        ``supervised`` any detected failure runs the recovery protocol and
+        the command retries from the restored state."""
+        self._ensure_started()
+        hb_s = float(self.spec.exec.heartbeat_s) if supervised else 0.0
+        while True:
+            try:
+                self._send(msg, what, range(self.nprocs))
+                reps = self._gather(timeout, what, hb_s=hb_s)
+                self._warm_ranks.update(range(self.nprocs))
+                return [reps[r] for r in range(self.nprocs)]
+            except _WorkerFailure as f:
+                if not supervised:
+                    self._abort(
+                        f"{f} during {what}"
+                        + "".join(f"\n  rank {r}: {e}"
+                                  for r, e in f.errors.items()))
+                self._handle_failure(f, what)
+
+    def _handle_failure(self, f: _WorkerFailure, what: str) -> None:
+        """The recovery protocol (see class docstring). Raises via
+        :meth:`_abort` once the restart budget is exhausted or when the
+        recovery itself trips over another failure."""
+        if self._recovering:
+            self._abort(f"nested failure during recovery: {f}")
+        if self._ckpt is None:
+            # No checkpointing -> nothing to resume from. Respawning would
+            # silently restart training at epoch 0, so keep the original
+            # fail-fast contract: abort the fleet, unlink every segment.
+            self._abort(
+                f"ranks {f.ranks} {f.kind} during {what} and no checkpoint "
+                f"directory is configured (pass ckpt_dir / --ckpt-dir to "
+                f"enable recovery)"
+                + "".join(f"\n  rank {r}: {e}"
+                          for r, e in f.errors.items()))
+        self.restarts += 1
+        event = {"epoch": self.epoch, "during": what, "ranks": f.ranks,
+                 "kind": f.kind, "detect_s": round(f.detect_s, 3),
+                 "restarts": self.restarts}
+        if self.restarts > self.spec.exec.max_restarts:
+            self.recovery_events.append({**event, "action": "abort"})
+            self._abort(
+                f"ranks {f.ranks} {f.kind} during {what}; restart budget "
+                f"exhausted (max_restarts={self.spec.exec.max_restarts})"
+                + "".join(f"\n  rank {r}: {e}"
+                          for r, e in f.errors.items()))
+        self._recovering = True
+        try:
+            failed = set(f.ranks)
+            # 1. Quiesce: survivors blocked on the wire unwind via the
+            #    RECOVER control word and reply; drain until every still-
+            #    pending survivor has reported (ok / recover / error) or
+            #    proven itself failed too.
+            self._mb.recover()
+            drain = set(f.pending) - failed
+            while drain:
+                try:
+                    self._gather(_RECOVER_DRAIN_S, "recovery drain",
+                                 ranks=sorted(drain),
+                                 ok_status=("ok", "recover", "error"))
+                    drain = set()
+                except _WorkerFailure as f2:
+                    failed |= set(f2.ranks)
+                    drain = set(f2.pending) - failed
+            # 2. Reap the failed ranks (kill is idempotent on the dead).
+            for r in sorted(failed):
+                p = self._procs[r]
+                if p is not None:
+                    p.kill()
+                    p.join(timeout=10.0)
+                if self._conns[r] is not None:
+                    try:
+                        self._conns[r].close()
+                    except OSError:
+                        pass
+            # 3. The wire is quiet: zero every seq/heartbeat/control word.
+            self._mb.reset_counts()
+            # 4. Respawn against the existing segments (no republish).
+            self._generation += 1
+            for r in sorted(failed):
+                self._spawn_rank(r)
+            self._gather(_PARENT_WAIT_S, "respawn startup",
+                         ranks=sorted(failed))
+            # 5. Everyone restores the newest common valid checkpoint
+            #    (None -> from-scratch reinit at epoch 0).
+            step = self._latest_common_step()
+            self._send({"cmd": "restore", "step": step}, "restore",
+                       range(self.nprocs))
+            reps = self._gather(_PARENT_WAIT_S, "restore")
+            self.epoch = int(reps[0]["epoch"])
+            self.recovery_events.append({
+                **event, "action": "respawn", "respawned": sorted(failed),
+                "restore_step": step, "resume_epoch": self.epoch})
+        except _WorkerFailure as f2:
+            self._abort(f"recovery from ({f}) failed: {f2}")
+        finally:
+            self._recovering = False
 
     def close(self, force: bool = False) -> None:
         if self._conns and not force:
             for c in self._conns:
+                if c is None:
+                    continue
                 try:
                     c.send({"cmd": "stop"})
                 except (BrokenPipeError, OSError, ValueError):
                     pass
         for p in self._procs:
-            p.join(timeout=2.0 if force else 15.0)
+            if p is not None:
+                p.join(timeout=2.0 if force else 15.0)
         for p in self._procs:
-            if p.is_alive():
+            if p is not None and p.is_alive():
                 p.terminate()
                 p.join(timeout=5.0)
         for c in self._conns:
+            if c is None:
+                continue
             try:
                 c.close()
             except OSError:
@@ -1082,8 +1526,11 @@ class MultiprocRuntime:
     # -- trainer-shaped interface -----------------------------------------
 
     def train_epoch(self) -> Dict[str, float]:
-        reps = self._command({"cmd": "epoch"}, "train epoch")
-        self.epoch += 1
+        reps = self._command({"cmd": "epoch"}, "train epoch",
+                             supervised=True)
+        # The workers own the epoch counter (a recovery mid-command winds
+        # it back to the restored step); the parent just mirrors it.
+        self.epoch = int(reps[0]["epoch"])
         self.epoch_stats.append({
             "epoch": self.epoch,
             "epoch_s": max(r["epoch_s"] for r in reps),
@@ -1094,12 +1541,15 @@ class MultiprocRuntime:
                 "epoch_s": float(self.epoch_stats[-1]["epoch_s"])}
 
     def evaluate(self) -> float:
-        reps = self._command({"cmd": "eval"}, "evaluate")
+        reps = self._command({"cmd": "eval"}, "evaluate", supervised=True)
         return float(reps[0]["eval_acc"])
 
     def fit(self, epochs: int, log_every: int = 0) -> List[Dict]:
         history = []
-        for _ in range(epochs):
+        # while (not for-range): a mid-run recovery winds self.epoch back
+        # to the restored checkpoint, and the re-trained epochs must still
+        # land the run at `epochs` total.
+        while self.epoch < epochs:
             m = self.train_epoch()
             if log_every and (self.epoch % log_every == 0
                               or self.epoch == epochs):
@@ -1121,7 +1571,7 @@ class MultiprocRuntime:
         spawning processes (the matrix dry-run hook for multiproc specs,
         standing in for ``.lower()``)."""
         table, total = ShmArena.layout(self._arrays)
-        layout = plan_mailbox(self._op_table)
+        layout = plan_mailbox(self._op_table, nprocs=self.nprocs)
         return {"store_bytes": int(total), "store_arrays": len(table),
                 "mailbox_bytes": int(layout["bytes"]),
                 "mailbox_ops": len(self._op_table)}

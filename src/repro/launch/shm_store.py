@@ -25,9 +25,16 @@ Two primitives, both over ``multiprocessing.shared_memory``:
     every rank executes the ops of one epoch in the same data-dependency
     order (a Kahn network — no deadlock, no reordering).
 
-    Word 0 of the counter region is an abort flag: the parent sets it when
-    a worker dies so survivors blocked in a wait raise
-    :class:`TransportAborted` instead of spinning forever.
+    Word 0 of the counter region is a control word: the parent sets it to
+    ``CTRL_ABORT`` when the run is dead (survivors blocked in a wait raise
+    :class:`TransportAborted` instead of spinning forever) or to
+    ``CTRL_RECOVER`` to quiesce survivors for fault recovery (they raise
+    :class:`TransportRecover`, unwind to their command loop, and await a
+    restore). Words ``1..nprocs`` are per-rank heartbeat counters: every
+    mailbox op (and every spin iteration of a blocked wait) bumps the
+    caller's word, so the parent can tell a *hung* worker (stale
+    heartbeat, process alive) from one that is merely waiting on a slow
+    peer (heartbeat advancing) or dead (exitcode).
 
 Ordering note: the write-buffer-then-bump-counter protocol relies on
 x86-TSO store ordering (CPython additionally serializes through the GIL
@@ -49,8 +56,10 @@ double-remove from the shared set.) :func:`leaked_segments` inspects
 
 from __future__ import annotations
 
+import argparse
 import atexit
 import os
+import re
 import time
 from multiprocessing import shared_memory
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
@@ -60,9 +69,19 @@ import numpy as np
 SEG_DIR = "/dev/shm"
 _ALIGN = 64
 
+# Control-word states (word 0 of the mailbox counter region).
+CTRL_RUN = 0
+CTRL_ABORT = 1
+CTRL_RECOVER = 2
+
 
 class TransportAborted(RuntimeError):
     """The parent flagged the run dead (a sibling worker exited)."""
+
+
+class TransportRecover(RuntimeError):
+    """The parent flagged fault recovery: unwind to the command loop and
+    await a restore (the run itself is still alive)."""
 
 
 class TransportTimeout(RuntimeError):
@@ -193,16 +212,17 @@ class ShmArena:
 # --------------------------------------------------------------------------
 
 
-def plan_mailbox(op_table: Sequence[dict]) -> dict:
+def plan_mailbox(op_table: Sequence[dict], nprocs: int = 0) -> dict:
     """Compute the mailbox segment layout from an op table.
 
     ``op_table`` rows are ``{"id": str, "pairs": [[src, dst, nbytes],...]}``
     with every rank deriving the identical table from the spec. Returns a
-    JSON-able layout: counter word 0 is the abort flag, then one seq word
+    JSON-able layout: counter word 0 is the control word, words
+    ``1..nprocs`` are the per-rank heartbeat counters, then one seq word
     and one aligned byte slot per pair.
     """
     slots: Dict[str, Dict[str, list]] = {}
-    seq_idx = 1  # word 0 = abort flag
+    seq_idx = 1 + nprocs  # word 0 = control, 1..nprocs = heartbeats
     off = 0
     for op in op_table:
         entry: Dict[str, list] = {}
@@ -212,7 +232,7 @@ def plan_mailbox(op_table: Sequence[dict]) -> dict:
             off += _aligned(int(nbytes))
         slots[op["id"]] = entry
     seq_bytes = _aligned(8 * seq_idx)
-    return {"seq_words": seq_idx, "seq_bytes": seq_bytes,
+    return {"seq_words": seq_idx, "seq_bytes": seq_bytes, "hb_words": nprocs,
             "data_bytes": max(off, 1), "bytes": seq_bytes + max(off, 1),
             "slots": slots}
 
@@ -228,6 +248,7 @@ class Mailboxes:
         self.timeout = wait_timeout_s
         self._seq = np.ndarray((layout["seq_words"],), dtype=np.int64,
                                buffer=shm.buf)
+        self._hb_words = int(layout.get("hb_words", 0))
         self._data = np.ndarray((layout["data_bytes"],), dtype=np.uint8,
                                 buffer=shm.buf, offset=layout["seq_bytes"])
         # (op, src, dst) -> (seq word, data offset, slot bytes)
@@ -255,14 +276,56 @@ class Mailboxes:
         return cls(shared_memory.SharedMemory(name=name), layout, rank=rank,
                    owner=False, wait_timeout_s=wait_timeout_s)
 
-    # -- abort flag --------------------------------------------------------
+    # -- control word + heartbeats ----------------------------------------
 
     def abort(self) -> None:
-        self._seq[0] = 1
+        self._seq[0] = CTRL_ABORT
+
+    def recover(self) -> None:
+        """Flag fault recovery: blocked survivors unwind to their command
+        loop via :class:`TransportRecover` instead of dying."""
+        self._seq[0] = CTRL_RECOVER
+
+    def clear_ctrl(self) -> None:
+        self._seq[0] = CTRL_RUN
+
+    @property
+    def ctrl(self) -> int:
+        return int(self._seq[0])
 
     @property
     def aborted(self) -> bool:
-        return bool(self._seq[0])
+        return self._seq[0] == CTRL_ABORT
+
+    def heartbeat(self) -> None:
+        """Bump this rank's liveness counter (no-op for the parent or when
+        the layout reserved no heartbeat words)."""
+        if 0 <= self.rank < self._hb_words:
+            self._seq[1 + self.rank] += 1
+
+    def heartbeats(self) -> List[int]:
+        """All ranks' heartbeat counters (parent-side monitor)."""
+        return [int(self._seq[1 + r]) for r in range(self._hb_words)]
+
+    def _check_ctrl(self, what: str) -> None:
+        c = self._seq[0]
+        if c == CTRL_ABORT:
+            raise TransportAborted(f"run aborted while {what}")
+        if c == CTRL_RECOVER:
+            raise TransportRecover(f"recovery flagged while {what}")
+
+    # -- recovery resets ---------------------------------------------------
+
+    def reset_counts(self) -> None:
+        """Parent-side: zero every seq word, heartbeat and the control word
+        while the fleet is quiesced, so respawned and surviving ranks agree
+        the wire is empty again."""
+        self._seq[...] = 0
+
+    def reset_local(self) -> None:
+        """Worker-side: forget per-op execution counts (pairs with the
+        parent's :meth:`reset_counts` during recovery)."""
+        self._count.clear()
 
     # -- the wire ----------------------------------------------------------
 
@@ -277,6 +340,7 @@ class Mailboxes:
         self._data[off:off + nb] = buf
         self._seq[si] = self._count.get(op, 0) + 1
         self.bytes_written += nb
+        self.heartbeat()
 
     def collect(self, op: str, src: int) -> np.ndarray:
         """Wait for the current execution's (op, src->self) payload and
@@ -286,9 +350,8 @@ class Mailboxes:
         t0 = time.perf_counter()
         spins = 0
         while self._seq[si] < want:
-            if self._seq[0]:
-                raise TransportAborted(f"run aborted while waiting on {op} "
-                                       f"from rank {src}")
+            self._check_ctrl(f"waiting on {op} from rank {src}")
+            self.heartbeat()
             spins += 1
             if spins < 256:
                 os.sched_yield()
@@ -321,11 +384,12 @@ def run_token() -> str:
 
 
 def publish_store(token: str, arrays: Dict[str, np.ndarray],
-                  op_table: Iterable[dict]) -> Tuple[ShmArena, Mailboxes, dict]:
+                  op_table: Iterable[dict], nprocs: int = 0,
+                  ) -> Tuple[ShmArena, Mailboxes, dict]:
     """Create both segments of a run and return (arena, mailboxes,
     manifest-fragment) — the builder-side entry point."""
     arena = ShmArena.publish(f"{token}-store", arrays)
-    layout = plan_mailbox(list(op_table))
+    layout = plan_mailbox(list(op_table), nprocs=nprocs)
     mailboxes = Mailboxes.create(f"{token}-mail", layout)
     frag = {
         "token": token,
@@ -334,3 +398,87 @@ def publish_store(token: str, arrays: Dict[str, np.ndarray],
         "mailbox": {"name": mailboxes.shm.name, **layout},
     }
     return arena, mailboxes, frag
+
+
+# --------------------------------------------------------------------------
+# Leaked-segment sweeper: python -m repro.launch.shm_store --gc
+# --------------------------------------------------------------------------
+
+# run_token() embeds the owner pid, so a sweep can refuse segments whose
+# creating process is still alive.
+_SEG_NAME_RE = re.compile(r"^(repromp)-(\d+)-[0-9a-f]+-(store|mail)$")
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True  # exists, owned by someone else
+    return True
+
+
+def gc_segments(prefix: str = "repromp", dry_run: bool = False,
+                ) -> Tuple[List[str], List[str]]:
+    """Sweep /dev/shm for run segments whose owner process is gone.
+
+    Returns ``(removed, kept)`` segment names. A segment is removed only
+    when its name parses as ``{prefix}-{pid}-{hex}-{store|mail}`` *and*
+    ``pid`` no longer exists — live runs and unparseable names are kept
+    (never unlink something we can't prove is ours and orphaned).
+    """
+    removed: List[str] = []
+    kept: List[str] = []
+    try:
+        names = sorted(os.listdir(SEG_DIR))
+    except OSError:
+        return removed, kept
+    for name in names:
+        if not name.startswith(prefix + "-"):
+            continue
+        m = _SEG_NAME_RE.match(name.replace(prefix, "repromp", 1))
+        if m is None or _pid_alive(int(m.group(2))):
+            kept.append(name)
+            continue
+        if not dry_run:
+            try:
+                shm = shared_memory.SharedMemory(name=name)
+            except (FileNotFoundError, OSError):
+                continue
+            shm.close()
+            try:
+                shm.unlink()
+            except FileNotFoundError:
+                continue
+        removed.append(name)
+    return removed, kept
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.shm_store",
+        description="Shared-memory segment utilities for the multiproc "
+                    "runtime.")
+    ap.add_argument("--gc", action="store_true",
+                    help="unlink run segments whose owner process is dead")
+    ap.add_argument("--prefix", default="repromp",
+                    help="segment name prefix to sweep (default: repromp)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="report what --gc would remove without unlinking")
+    args = ap.parse_args(argv)
+    if not args.gc:
+        ap.error("nothing to do (pass --gc)")
+    removed, kept = gc_segments(prefix=args.prefix, dry_run=args.dry_run)
+    verb = "would remove" if args.dry_run else "removed"
+    for name in removed:
+        print(f"{verb} {name}")
+    for name in kept:
+        print(f"kept {name} (owner alive or unrecognized name)")
+    if not removed and not kept:
+        print(f"no {args.prefix}-* segments under {SEG_DIR}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -39,7 +39,8 @@ def run_gcn(args):
     print(f"exchange schedule: {session.schedule.describe()}")
     t0 = time.time()
     try:
-        hist = session.fit()
+        hist = session.fit(ckpt_dir=getattr(args, "ckpt_dir", None),
+                           resume=bool(getattr(args, "resume", False)))
         dt = time.time() - t0
         for h in hist:
             print(f"epoch {h['epoch']:4d} loss {h['loss']:.4f} "
@@ -169,6 +170,27 @@ def main():
                     help="multiproc worker count (must equal "
                          "partition.nparts; 0/omitted = nparts); alias for "
                          "--set exec.nprocs=N")
+    # Fault tolerance (checkpointing + multiproc supervision)
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="snapshot period in epochs (0 = off); alias for "
+                         "--set exec.ckpt_every=N")
+    ap.add_argument("--max-restarts", type=int, default=None,
+                    help="multiproc worker respawns before a failing run "
+                         "degrades to a clean abort; alias for "
+                         "--set exec.max_restarts=N")
+    ap.add_argument("--heartbeat-s", dest="heartbeat_s", type=float,
+                    default=None,
+                    help="stale-heartbeat deadline for declaring a live "
+                         "multiproc worker hung (0 = off); alias for "
+                         "--set exec.heartbeat_s=S")
+    ap.add_argument("--ckpt-dir", type=str, default=None,
+                    help="checkpoint directory: turns on periodic atomic "
+                         "snapshots (per-rank subdirs under multiproc) and "
+                         "enables --resume")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid checkpoint from "
+                         "--ckpt-dir before training (the resumed run "
+                         "reproduces the uninterrupted loss trajectory)")
     # lm options
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--batch", type=int, default=4)

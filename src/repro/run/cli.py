@@ -47,6 +47,9 @@ LEGACY_ALIASES: Dict[str, Union[str, Tuple[str, ...]]] = {
     "nprocs": "exec.nprocs",
     "epochs": "exec.epochs",
     "lr": "exec.lr",
+    "ckpt_every": "exec.ckpt_every",
+    "max_restarts": "exec.max_restarts",
+    "heartbeat_s": "exec.heartbeat_s",
     "seed": ("graph.seed", "partition.seed", "exec.seed"),
 }
 

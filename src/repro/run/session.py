@@ -134,18 +134,66 @@ class Session:
     # -- training ----------------------------------------------------------
 
     def fit(self, epochs: Optional[int] = None,
-            log_every: Optional[int] = None) -> List[Dict]:
+            log_every: Optional[int] = None,
+            ckpt_dir: Optional[str] = None,
+            resume: bool = False) -> List[Dict]:
         """Train for ``epochs`` (default: the spec's) and return history.
 
         ``log_every`` falls back to the spec's, whose 0 means "auto"
         (~10 eval points); pass an explicit 0 to skip evals entirely
-        (pure-throughput benchmark loops)."""
+        (pure-throughput benchmark loops).
+
+        ``ckpt_dir`` turns on periodic checkpointing (atomic snapshots
+        every ``spec.exec.ckpt_every`` epochs, default every epoch) and
+        ``resume=True`` restores the newest valid checkpoint before
+        training — the epoch counter fast-forwards, so a resumed run
+        trains only the remaining epochs and reproduces the uninterrupted
+        trajectory bit-for-bit (all per-epoch RNG derives from the epoch
+        number). Under the multiproc backend the workers snapshot per-rank
+        and the supervisor also restores from here on fault recovery.
+        """
         e = self.spec.exec
         n = e.epochs if epochs is None else epochs
         le = e.log_every if log_every is None else log_every
         if not le and log_every is None:
             le = max(n // 10, 1)
-        return self.trainer.fit(n, log_every=le)
+        if ckpt_dir is None:
+            if resume:
+                raise ValueError("resume=True needs ckpt_dir")
+            return self.trainer.fit(n, log_every=le)
+
+        every = e.ckpt_every if e.ckpt_every else 1
+        tr = self.trainer
+        save = None
+        if hasattr(tr, "configure_ckpt"):
+            # Multiproc: workers snapshot per-rank inside train_epoch; the
+            # parent only points them at the directory (before spawn) and
+            # triggers the restore command on resume.
+            tr.configure_ckpt(ckpt_dir, every=every)
+            if resume:
+                tr.restore_from_ckpt()
+        else:
+            from repro.checkpoint import CheckpointManager
+            mgr = CheckpointManager(ckpt_dir)
+            if resume:
+                try:
+                    tr.restore_train_state_from(mgr)
+                except FileNotFoundError as err:
+                    raise RuntimeError(
+                        f"resume requested but no valid checkpoint under "
+                        f"{ckpt_dir}") from err
+            save = lambda: tr.save_train_state(mgr)
+
+        history = []
+        while tr.epoch < n:
+            m = tr.train_epoch()
+            if save is not None and (tr.epoch % every == 0 or tr.epoch == n):
+                save()
+            if le and (tr.epoch % le == 0 or tr.epoch == n):
+                m["eval_acc"] = tr.evaluate()
+                m["epoch"] = tr.epoch
+                history.append(m)
+        return history
 
     def train_epoch(self) -> Dict[str, float]:
         return self.trainer.train_epoch()

@@ -317,6 +317,10 @@ class ExecSpec(_SubSpec):
     seed: int = 0
     log_every: int = 0         # 0 = auto (epochs // 10)
     nprocs: int = 0            # multiproc only: 0 = partition.nparts
+    # Fault tolerance (multiproc supervision + checkpoint/resume):
+    ckpt_every: int = 0        # snapshot period in epochs (0 = off)
+    max_restarts: int = 2      # worker respawns before degrading to abort
+    heartbeat_s: float = 15.0  # stale-heartbeat hang deadline (0 = off)
 
     def validate(self) -> None:
         if self.mode not in ("vmap", "shard_map", "multiproc"):
@@ -329,6 +333,15 @@ class ExecSpec(_SubSpec):
         if self.nprocs and self.mode != "multiproc":
             raise SpecError("exec.nprocs is only meaningful with "
                             f"mode='multiproc', got mode={self.mode!r}")
+        if self.ckpt_every < 0:
+            raise SpecError(f"exec.ckpt_every must be >= 0 (0 disables "
+                            f"checkpointing), got {self.ckpt_every}")
+        if self.max_restarts < 0:
+            raise SpecError(f"exec.max_restarts must be >= 0, "
+                            f"got {self.max_restarts}")
+        if self.heartbeat_s < 0:
+            raise SpecError(f"exec.heartbeat_s must be >= 0 (0 disables "
+                            f"hang detection), got {self.heartbeat_s}")
 
 
 @dataclass(frozen=True)

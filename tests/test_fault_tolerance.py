@@ -1,0 +1,345 @@
+"""Fault tolerance: atomic checkpoint/resume, the supervised multiproc
+recovery path (kill / stall / checkpoint corruption / restart-budget
+exhaustion), and the shared-memory segment sweeper.
+
+The recovery tests drive the same injection + judging helpers as the
+chaos CLI (``python -m repro.launch.chaos``), so what CI asserts here is
+exactly what ``make chaos-smoke`` measures. Spawning worker fleets is
+expensive on the 1-core CI box: the multiproc chaos tests are marked
+``chaos`` + ``slow`` (skipped by ``make check-fast``), share module-scoped
+baselines, and run at toy scale.
+"""
+
+import subprocess
+import sys
+from multiprocessing import shared_memory
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (
+    CheckpointCorrupt,
+    CheckpointManager,
+    latest_common_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.launch.chaos import evaluate_case, run_baseline, run_faulted
+from repro.launch.shm_store import gc_segments
+from repro.run import RunSpec, build_session
+
+TOL = 1e-5  # recovery must reproduce the fail-free trajectory to this
+
+
+def _tree(v=0.0):
+    return {"layers": [{"w": jnp.full((2, 3), 1.5 + v), "b": jnp.zeros(3)}],
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def _flat_ft_spec(**exec_over):
+    """The P=2 flat Int2 smoke spec + fault-tolerance knobs."""
+    ov = dict(epochs=4, ckpt_every=1, max_restarts=2, heartbeat_s=5.0)
+    ov.update(exec_over)
+    return RunSpec().with_overrides([
+        "graph.source=sbm", "graph.nodes=96", "graph.classes=4",
+        "graph.feat_dim=16", "graph.feat_noise=2.0", "graph.homophily=0.8",
+        "graph.norm=mean", "partition.nparts=2", "schedule.bits=2",
+        "model.model=sage", "model.hidden_dim=16", "model.num_layers=2",
+        "model.dropout=0.0", "model.label_prop=false",
+        "exec.mode=multiproc", "exec.nprocs=2",
+    ] + [f"exec.{k}={v}" for k, v in ov.items()])
+
+
+def _hier_ft_spec(**exec_over):
+    """P=4 hierarchical 2x2 / Int2 inter / cd=2 + fault tolerance: the
+    recovery must also reinstate the per-stage halo caches so stale
+    (delayed-comm) epochs replay identically."""
+    ov = dict(epochs=4, ckpt_every=1, max_restarts=2, heartbeat_s=5.0)
+    ov.update(exec_over)
+    return RunSpec().with_overrides([
+        "graph.source=sbm", "graph.nodes=128", "graph.classes=4",
+        "graph.feat_dim=16", "graph.feat_noise=2.0", "graph.homophily=0.8",
+        "graph.norm=mean", "partition.nparts=4", "partition.groups=2",
+        "schedule.inter_bits=2", "schedule.inter_cd=2",
+        "schedule.overlap=true", "schedule.agg_backend=ell",
+        "model.model=sage", "model.hidden_dim=16", "model.num_layers=2",
+        "model.dropout=0.0", "model.label_prop=true",
+        "exec.mode=multiproc", "exec.nprocs=4",
+    ] + [f"exec.{k}={v}" for k, v in ov.items()])
+
+
+class TestCheckpointManager:
+    def test_retention_keeps_newest_k(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        for s in range(1, 5):
+            mgr.save(_tree(s), step=s, meta={"epoch": s})
+        assert mgr.steps() == [3, 4]
+        assert mgr.latest() == 4
+        ck, step = mgr.load_latest()
+        assert step == 4
+        assert ck["manifest"]["meta"]["epoch"] == 4
+
+    def test_corrupt_newest_falls_back_to_previous(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=3)
+        mgr.save(_tree(1), step=1)
+        mgr.save(_tree(2), step=2)
+        npz = mgr.path_for(2).with_suffix(".npz")
+        raw = bytearray(npz.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        npz.write_bytes(bytes(raw))
+        assert not mgr.verify(2)
+        assert mgr.valid_steps() == [1]
+        ck, step = mgr.load_latest()
+        assert step == 1
+        with pytest.raises(CheckpointCorrupt):
+            load_checkpoint(mgr.path_for(2))
+
+    def test_stale_manifest_beside_new_arrays_rejected(self, tmp_path):
+        """Swapping in arrays the manifest doesn't describe must fail the
+        sha256 verification (the torn-pair detector)."""
+        p = tmp_path / "ck"
+        save_checkpoint(p, _tree(0.0), step=1)
+        other = tmp_path / "other"
+        save_checkpoint(other, _tree(9.0), step=1)
+        p.with_suffix(".npz").write_bytes(
+            other.with_suffix(".npz").read_bytes())
+        with pytest.raises(CheckpointCorrupt, match="checksum mismatch"):
+            load_checkpoint(p)
+        assert load_checkpoint(p, verify=False)["arrays"]
+
+    def test_missing_manifest_never_committed(self, tmp_path):
+        mgr = CheckpointManager(tmp_path)
+        mgr.save(_tree(), step=1)
+        mgr.path_for(1).with_suffix(".json").unlink()
+        assert mgr.steps() == []
+        with pytest.raises(FileNotFoundError):
+            load_checkpoint(mgr.path_for(1))
+
+    def test_latest_common_step_across_ranks(self, tmp_path):
+        mgrs = {r: CheckpointManager(tmp_path / f"rank{r}") for r in range(2)}
+        for s in (1, 2, 3):
+            mgrs[0].save(_tree(s), step=s)
+        for s in (1, 2):
+            mgrs[1].save(_tree(s), step=s)
+        assert latest_common_step(mgrs) == 2
+        mgrs[1].delete(2)
+        assert latest_common_step(mgrs) == 1
+        mgrs[1].delete(1)
+        assert latest_common_step(mgrs) is None
+
+
+class TestResumeInProcess:
+    def _spec(self, epochs):
+        return RunSpec().with_overrides([
+            "graph.source=sbm", "graph.nodes=96", "graph.classes=4",
+            "graph.feat_dim=16", "graph.feat_noise=2.0",
+            "graph.homophily=0.8", "graph.norm=mean", "partition.nparts=2",
+            "schedule.bits=2", "model.model=sage", "model.hidden_dim=16",
+            "model.num_layers=2", "model.dropout=0.0",
+            "model.label_prop=false", "exec.mode=vmap",
+            f"exec.epochs={epochs}", "exec.ckpt_every=1"])
+
+    def test_vmap_resume_reproduces_trajectory(self, tmp_path):
+        """Interrupt after 3/6 epochs, resume in a fresh session: epochs
+        4-6 must match the uninterrupted run (epoch RNG derives from the
+        epoch number, so the match is bitwise)."""
+        s = build_session(self._spec(6))
+        full = s.fit(log_every=1)
+        s = build_session(self._spec(3))
+        s.fit(log_every=1, ckpt_dir=tmp_path)
+        assert CheckpointManager(tmp_path).latest() == 3
+        s2 = build_session(self._spec(6))
+        tail = s2.fit(log_every=1, ckpt_dir=tmp_path, resume=True)
+        assert [h["epoch"] for h in tail] == [4, 5, 6]
+        by_epoch = {h["epoch"]: h["loss"] for h in full}
+        for h in tail:
+            assert abs(h["loss"] - by_epoch[h["epoch"]]) <= TOL
+
+    def test_resume_needs_ckpt_dir(self):
+        s = build_session(self._spec(1))
+        with pytest.raises(ValueError, match="resume.*ckpt_dir"):
+            s.fit(resume=True)
+
+    def test_resume_empty_dir_raises(self, tmp_path):
+        s = build_session(self._spec(1))
+        with pytest.raises(RuntimeError, match="no valid checkpoint"):
+            s.fit(ckpt_dir=tmp_path / "empty", resume=True)
+
+
+class TestShardMapRestore:
+    def _spec(self, epochs):
+        # cd=2 so the resumable state includes the worker-axis-sharded
+        # halo cache, not just replicated params/opt.
+        return RunSpec().with_overrides([
+            "graph.source=sbm", "graph.nodes=96", "graph.classes=4",
+            "graph.feat_dim=16", "graph.feat_noise=2.0",
+            "graph.homophily=0.8", "graph.norm=mean", "partition.nparts=2",
+            "schedule.bits=2", "schedule.cd=2", "model.model=sage",
+            "model.hidden_dim=16", "model.num_layers=2", "model.dropout=0.0",
+            "model.label_prop=false", "exec.mode=shard_map",
+            f"exec.epochs={epochs}", "exec.ckpt_every=1"])
+
+    def test_sharded_restore_no_retrace(self, tmp_path):
+        """Restoring into shard_map mode must land params/opt replicated
+        and the halo cache sharded over the worker axis — proven by the
+        step compiling exactly once after resume (a sharding mismatch
+        would build a second executable) and by the restored trajectory
+        matching the uninterrupted one."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        s = build_session(self._spec(5))
+        ref = [s.train_epoch()["loss"] for _ in range(5)]
+
+        s1 = build_session(self._spec(3))
+        mgr = CheckpointManager(tmp_path)
+        for _ in range(3):
+            s1.train_epoch()
+        s1.trainer.save_train_state(mgr)
+
+        s2 = build_session(self._spec(5))
+        tr = s2.trainer
+        assert tr.restore_train_state_from(mgr) == 3
+        assert tr.epoch == 3
+        want = NamedSharding(tr.mesh, P(tr._data_axes))
+        for leaf in jax.tree_util.tree_leaves(tr._cache):
+            assert leaf.sharding == want
+        tail = [s2.train_epoch()["loss"] for _ in range(2)]
+        np.testing.assert_allclose(tail, ref[3:], atol=TOL, rtol=0)
+        assert s2.step_cache_size() == 1
+
+    def test_state_shardings_shape(self):
+        s = build_session(self._spec(1))
+        tr = s.trainer
+        template = tr.train_state()
+        sh = tr._state_shardings(template)
+        assert set(sh) == set(template) >= {"params", "opt_state", "cache"}
+        flat_p = jax.tree_util.tree_leaves(sh["params"])
+        assert all(p.spec == jax.sharding.PartitionSpec() for p in flat_p)
+
+
+class TestShmSweeper:
+    def _dead_pid(self):
+        p = subprocess.run([sys.executable, "-c",
+                            "import os; print(os.getpid())"],
+                           capture_output=True, text=True, check=True)
+        return int(p.stdout)
+
+    def test_gc_removes_dead_owner_segments(self):
+        name = f"repromp-{self._dead_pid()}-deadbeef-store"
+        seg = shared_memory.SharedMemory(name=name, create=True, size=64)
+        seg.close()
+        try:
+            listed, kept = gc_segments(dry_run=True)
+            assert name in listed
+            removed, _ = gc_segments()
+            assert name in removed
+        finally:
+            try:
+                shared_memory.SharedMemory(name=name).unlink()
+            except FileNotFoundError:
+                pass
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=name)
+
+    def test_gc_refuses_live_owner(self):
+        import os
+        name = f"repromp-{os.getpid()}-deadbeef-mail"
+        seg = shared_memory.SharedMemory(name=name, create=True, size=64)
+        try:
+            removed, kept = gc_segments()
+            assert name not in removed
+            assert name in kept
+        finally:
+            seg.close()
+            seg.unlink()
+
+
+@pytest.fixture(scope="module")
+def flat_baseline():
+    return run_baseline(_flat_ft_spec())
+
+
+@pytest.fixture(scope="module")
+def hier_baseline():
+    return run_baseline(_hier_ft_spec())
+
+
+def _assert_recovered(case):
+    assert case["ok"], {k: v for k, v in case.items() if k != "events"}
+    assert case["restarts"] >= 1
+    assert case["max_loss_delta"] <= TOL
+    assert case["leaked_segments"] == []
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+class TestChaosFlat:
+    """Flat P=2: kill + stall recovery, corruption fallback, budget."""
+
+    def test_kill_resumes_trajectory(self, flat_baseline, tmp_path):
+        spec = _flat_ft_spec()
+        obs = run_faulted(spec, "kill", rank=1, at_epoch=2,
+                          ckpt_dir=str(tmp_path))
+        case = evaluate_case("kill", 1, 2, flat_baseline, obs, TOL)
+        _assert_recovered(case)
+        assert case["detection_kind"] == "dead"
+        assert case["restore_step"] == 2
+
+    def test_stall_resumes_trajectory(self, flat_baseline, tmp_path):
+        obs = run_faulted(_flat_ft_spec(), "stall", rank=0, at_epoch=2,
+                          ckpt_dir=str(tmp_path))
+        case = evaluate_case("stall", 0, 2, flat_baseline, obs, TOL)
+        _assert_recovered(case)
+        assert case["detection_kind"] == "hung"
+        # stale-heartbeat detection, not a wait-for-timeout: latency is
+        # on the order of heartbeat_s, far under the transport timeout
+        assert case["detection_latency_s"] < 60
+
+    def test_ckpt_corruption_falls_back_one_step(self, flat_baseline,
+                                                 tmp_path):
+        obs = run_faulted(_flat_ft_spec(), "ckpt-corrupt", rank=1,
+                          at_epoch=2, ckpt_dir=str(tmp_path))
+        case = evaluate_case("ckpt-corrupt", 1, 2, flat_baseline, obs, TOL)
+        _assert_recovered(case)
+        assert case["corrupted_step"] == 2
+        assert case["restore_step"] < 2
+
+    def test_restart_budget_exhaustion_aborts_clean(self, tmp_path):
+        """max_restarts=0: the first fault must end the run with the
+        budget error, zero leaked segments, and the latest checkpoints
+        intact on disk for a later --resume."""
+        spec = _flat_ft_spec(max_restarts=0)
+        obs = run_faulted(spec, "kill", rank=1, at_epoch=2,
+                          ckpt_dir=str(tmp_path))
+        assert obs["error"] is not None
+        assert "restart budget exhausted" in obs["error"]
+        assert obs["leaked_segments"] == []
+        mgrs = {r: CheckpointManager(tmp_path / f"rank{r}")
+                for r in range(2)}
+        assert latest_common_step(mgrs) == 2
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+class TestChaosHier:
+    """P=4 hierarchical / Int2 inter / cd=2: recovery must reinstate the
+    per-stage halo caches so stale epochs after the restore replay the
+    exact delayed-comm trajectory."""
+
+    def test_kill_resumes_trajectory(self, hier_baseline, tmp_path):
+        obs = run_faulted(_hier_ft_spec(), "kill", rank=3, at_epoch=2,
+                          ckpt_dir=str(tmp_path))
+        case = evaluate_case("kill", 3, 2, hier_baseline, obs, TOL)
+        _assert_recovered(case)
+        assert case["detection_kind"] == "dead"
+
+    def test_stall_resumes_trajectory(self, hier_baseline, tmp_path):
+        obs = run_faulted(_hier_ft_spec(), "stall", rank=0, at_epoch=2,
+                          ckpt_dir=str(tmp_path))
+        case = evaluate_case("stall", 0, 2, hier_baseline, obs, TOL)
+        _assert_recovered(case)
+        assert case["detection_kind"] == "hung"

@@ -79,8 +79,10 @@ class TestContentHash:
         # The stability contract: hashing is canonical-JSON sha256. This
         # value changes iff the spec schema or its defaults change — which
         # invalidates recorded artifacts and should be a conscious act.
-        # (PR 7 added exec.nprocs, rehashing from rs-408ff1e8bfd8.)
-        assert RunSpec().content_hash() == "rs-d87a4352cce8"
+        # (PR 7 added exec.nprocs, rehashing from rs-408ff1e8bfd8; PR 8
+        # added exec.ckpt_every/max_restarts/heartbeat_s, rehashing from
+        # rs-d87a4352cce8.)
+        assert RunSpec().content_hash() == "rs-58ae58fdfdbc"
 
     def test_sub_spec_hashes(self):
         # Per-section hashes: kind-prefixed, content-addressed, and only
