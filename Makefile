@@ -1,7 +1,7 @@
 # Tier-1 verification (same command as ROADMAP.md).
 PY ?= python
 
-.PHONY: check check-fast check-overlap audit spec-matrix bench-comm bench-comm-sweep bench-agg bench-scaling-measured chaos-smoke
+.PHONY: check check-fast check-overlap audit spec-matrix bench-comm bench-comm-sweep bench-agg bench-scaling-measured chaos-smoke tune-smoke
 
 check:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -70,3 +70,16 @@ CHAOS_FLAGS ?=
 chaos-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.chaos \
 		--fault all --out $(CHAOS_OUT) $(CHAOS_FLAGS)
+
+# Auto-scheduler smoke: sweep + audit-gated tune at PR-check scale
+# (dense rmat12, P=4 hierarchical), measured vmap probes (multiproc
+# probes are scheduler churn on 1-2 CPU runners; --probe-mode multiproc
+# for real hardware), bucket-max refinement before/after. Exits non-zero
+# if the winner fails the audit gate or (with
+# TUNER_FLAGS="--check-against ...") a deterministic row regresses >15%
+# vs the checked-in artifact. TUNER_OUT overrides the artifact path.
+TUNER_OUT ?= experiments/BENCH_tuner.json
+TUNER_FLAGS ?=
+tune-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/tuner.py \
+		--quick --out $(TUNER_OUT) $(TUNER_FLAGS)

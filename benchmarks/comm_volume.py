@@ -31,9 +31,10 @@ import sys
 
 import numpy as np
 
-from repro.core.perf_model import FUGAKU_A64FX, comm_time, hier_epoch_time
+from repro.core.perf_model import (FUGAKU_A64FX, HARDWARE, HardwareSpec,
+                                   comm_time, get_hardware)
 from repro.quant import wire_bytes
-from repro.run import BuildCache, RunSpec
+from repro.run import BuildCache, RunSpec, sweep_rows
 
 
 def _spec(scale: int, nparts: int, feat_dim: int, groups: int = 0,
@@ -50,13 +51,12 @@ def _spec(scale: int, nparts: int, feat_dim: int, groups: int = 0,
 
 
 def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256,
-        num_groups: int = 0) -> list:
+        num_groups: int = 0, hw: HardwareSpec = FUGAKU_A64FX) -> list:
     cache = BuildCache()
     spec = _spec(scale, nparts, feat_dim)
     g, _ = cache.graph(spec)
     pg = cache.partition(spec, g)
     s = pg.stats
-    hw = FUGAKU_A64FX
     rows = []
 
     def gb(rows_count, bits=32):
@@ -106,7 +106,7 @@ def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256,
         spec_h = _spec(scale, nparts, feat_dim, groups=nparts // group_size)
         hpg = cache.partition(spec_h, g)
         rows.extend(run_hierarchical(g, nparts, feat_dim,
-                                     group_size=group_size, hpg=hpg))
+                                     group_size=group_size, hpg=hpg, hw=hw))
         rows.extend(run_schedule_check(nparts, feat_dim,
                                        group_size=group_size, pg=pg, hpg=hpg,
                                        scale=scale, cache=cache, g=g))
@@ -114,7 +114,8 @@ def run(scale: int = 13, nparts: int = 16, feat_dim: int = 256,
 
 
 def run_hierarchical(g=None, nparts: int = 16, feat_dim: int = 256,
-                     group_size: int = 4, scale: int = 13, hpg=None) -> list:
+                     group_size: int = 4, scale: int = 13, hpg=None,
+                     hw: HardwareSpec = FUGAKU_A64FX) -> list:
     """Two-level split on the same graph: intra rows stay on the fast
     fabric; inter rows shrink via group-level dedup/merge."""
     if group_size < 1 or nparts % group_size or nparts < group_size:
@@ -128,7 +129,6 @@ def run_hierarchical(g=None, nparts: int = 16, feat_dim: int = 256,
         g_, _ = cache.graph(spec) if g is None else (g, None)
         hpg = cache.partition(spec, g_)
     s = hpg.stats
-    hw = FUGAKU_A64FX
 
     def gb(rows_count, bits=32):
         return rows_count * feat_dim * bits / 8 / 1e9
@@ -241,7 +241,8 @@ GRID_CI = ((2, 2), (2, 4), (4, 2), (4, 4), (8, 4))
 GRID_STRONG = ((8, 8), (16, 8), (16, 16), (32, 16), (64, 16), (128, 16))
 
 
-def sweep(scale: int = 12, feat_dim: int = 256, grid=GRID_CI) -> list:
+def sweep(scale: int = 12, feat_dim: int = 256, grid=GRID_CI,
+          hw: HardwareSpec = FUGAKU_A64FX) -> list:
     """G x W grid of the two-level split (ROADMAP strong-scaling curve):
     per-combo stage rows, predicted wire bytes for the (now default)
     Int2-inter schedule, and the modelled epoch time with/without the
@@ -249,39 +250,43 @@ def sweep(scale: int = 12, feat_dim: int = 256, grid=GRID_CI) -> list:
     paper's strong-scaling curve shape (epoch time keeps falling while the
     inter wire stays hidden behind local aggregation, then flattens where
     the exposed remainder takes over). Each row records its RunSpec and
-    content hash."""
+    content hash.
+
+    The once-hardcoded G x W loop is now one override-set grid through the
+    general engine (:func:`repro.run.sweep.sweep_rows`) — the BuildCache
+    sharing, hash-keyed rows and partition health come from there; this
+    function only shapes the rows into the checked-in artifact's schema."""
+    base = _spec(scale, grid[0][0] * grid[0][1], feat_dim, groups=grid[0][0])
+    sets = [[f"partition.nparts={g_ * w}", f"partition.groups={g_}"]
+            for g_, w in grid]
     cache = BuildCache()
+    rows, invalid = sweep_rows(base, sets, cache=cache, hw=hw)
+    if invalid:
+        raise AssertionError(f"G x W grid combos failed to validate: {invalid}")
     out = []
-    for num_groups, group_size in grid:
-        nparts = num_groups * group_size
-        spec = _spec(scale, nparts, feat_dim, groups=num_groups)
+    for row in rows:
+        spec = RunSpec.from_dict(row["spec"])
         g, _ = cache.graph(spec)
-        hpg = cache.partition(spec, g)
-        s = hpg.stats
-        dc = spec.schedule.to_dist_config(spec.partition)
-        stage_bytes = dc.schedule().wire_volume_bytes(s, feat_dim)
-        model = hier_epoch_time(
-            stage_bytes["intra"], stage_bytes["inter"],
-            local_nnz=[c.nnz for c in hpg.local_csr],
-            owned_rows=[len(o) for o in hpg.owned],
-            feat_dim=feat_dim, hidden_dim=256, num_layers=3,
-            hw=FUGAKU_A64FX)
+        s = cache.partition(spec, g).stats
         out.append({
             "scale": scale,
-            "num_groups": num_groups,
-            "group_size": group_size,
-            "nparts": nparts,
-            "spec_hash": spec.content_hash(),
-            "spec": spec.to_dict(),
+            "num_groups": spec.partition.groups,
+            "group_size": spec.partition.resolved_group_size(),
+            "nparts": spec.partition.nparts,
+            "spec_hash": row["spec_hash"],
+            "spec": row["spec"],
+            "hw": hw.name,
             "intra_rows": s.intra_rows,
             "inter_rows": s.inter_rows,
             "flat_inter_rows": s.flat_inter_rows,
             "inter_savings": round(s.inter_savings(), 4),
-            "predicted_wire_bytes": stage_bytes,
+            "partition_stats": row["partition_stats"],
+            "predicted_wire_bytes": row["predicted_wire_bytes"],
             "modelled_epoch_s": {
-                "sequential": model["sequential"],
-                "overlap": model["overlap"],
-                "inter_hidden_fraction": model["inter_hidden_fraction"],
+                "sequential": row["modelled"]["sequential"],
+                "overlap": row["modelled"]["overlap"],
+                "inter_hidden_fraction":
+                    row["modelled"]["inter_hidden_fraction"],
             },
         })
     return out
@@ -306,6 +311,10 @@ def main() -> None:
                          "to 2048 workers (use --scale >= 13)")
     ap.add_argument("--out", type=str, default=None,
                     help="with --sweep: write the JSON here instead of stdout")
+    ap.add_argument("--hw", default=FUGAKU_A64FX.name,
+                    choices=sorted(HARDWARE) + ["measured"],
+                    help="hardware model for the modelled-time columns "
+                         "('measured' probes this machine)")
     args = ap.parse_args()
     if args.sweep and (args.nparts is not None or args.groups):
         ap.error("--sweep runs a fixed G x W grid; --nparts/--groups "
@@ -318,9 +327,11 @@ def main() -> None:
     if args.groups and nparts % args.groups:
         ap.error(f"--groups {args.groups} must divide --nparts {nparts}")
 
+    hw = get_hardware(args.hw)
     if args.sweep:
         result = sweep(scale=args.scale, feat_dim=args.feat_dim,
-                       grid=GRID_CI if args.grid == "ci" else GRID_STRONG)
+                       grid=GRID_CI if args.grid == "ci" else GRID_STRONG,
+                       hw=hw)
         payload = json.dumps(result, indent=1)
         if args.out:
             with open(args.out, "w") as f:
@@ -332,7 +343,7 @@ def main() -> None:
         return
     print("name,us_per_call,derived")
     for row in run(scale=args.scale, nparts=nparts,
-                   feat_dim=args.feat_dim, num_groups=args.groups):
+                   feat_dim=args.feat_dim, num_groups=args.groups, hw=hw):
         print(f"{row['name']},{row['us_per_call']},{row['derived']}")
 
 

@@ -11,7 +11,9 @@ codebase compiles for (DESIGN.md §3).
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
+from typing import Dict
 
 import numpy as np
 
@@ -29,9 +31,90 @@ class HardwareSpec:
         return self.th_cal / self.bw_comm
 
 
-ABCI_XEON = HardwareSpec("abci-xeon6148", bw_comm=12.5e9, latency=2e-6, th_cal=200e9)
-FUGAKU_A64FX = HardwareSpec("fugaku-a64fx", bw_comm=6.8e9, latency=1e-6, th_cal=1024e9)
-TPU_V5E = HardwareSpec("tpu-v5e-ici", bw_comm=50e9, latency=1e-6, th_cal=819e9)
+# Registry: every call site used to pin FUGAKU_A64FX; modelled rows now
+# name their machine (``--hw`` on the benchmark CLIs, ``hw=`` through the
+# sweep engine). ``"measured"`` resolves lazily to a spec probed on the
+# machine actually running the model (see :func:`measure_local_hardware`).
+HARDWARE: Dict[str, HardwareSpec] = {}
+
+
+def register_hardware(hw: HardwareSpec) -> HardwareSpec:
+    HARDWARE[hw.name] = hw
+    return hw
+
+
+ABCI_XEON = register_hardware(
+    HardwareSpec("abci-xeon6148", bw_comm=12.5e9, latency=2e-6, th_cal=200e9))
+FUGAKU_A64FX = register_hardware(
+    HardwareSpec("fugaku-a64fx", bw_comm=6.8e9, latency=1e-6, th_cal=1024e9))
+TPU_V5E = register_hardware(
+    HardwareSpec("tpu-v5e-ici", bw_comm=50e9, latency=1e-6, th_cal=819e9))
+
+_MEASURED: Dict[str, HardwareSpec] = {}
+
+
+def measure_local_hardware(size_mb: int = 64, iters: int = 3,
+                           name: str = "measured") -> HardwareSpec:
+    """Probe THIS host into a :class:`HardwareSpec`.
+
+    The multiproc runtime's "wire" is the shared-memory mailbox fabric, so
+    the local analogue of ``bw_comm`` is a post+collect through memory —
+    two passes over the payload — and ``latency`` is the software overhead
+    of shipping a tiny (one cache line) message. ``th_cal`` is the
+    streaming copy bandwidth the Eqn-3/4 compute terms assume. All three
+    are medians over ``iters`` trials so one scheduler hiccup can't skew
+    the calibration.
+    """
+    n = size_mb * (1 << 20) // 4
+    src = np.ones(n, np.float32)
+    dst = np.empty_like(src)
+    mailbox = np.empty_like(src)
+
+    def _med(fn, passes):
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return passes * src.nbytes / float(np.median(ts))
+
+    dst[:] = src  # touch/fault pages before timing
+    # Streaming compute throughput: one read + one write per element.
+    th_cal = _med(lambda: np.copyto(dst, src), passes=2)
+
+    # Mailbox "wire": sender posts into the shared segment, receiver
+    # collects out of it — payload bytes cross memory twice, so effective
+    # per-link wire bandwidth is half a copy's.
+    def _post_collect():
+        np.copyto(mailbox, src)
+        np.copyto(dst, mailbox)
+
+    bw_comm = _med(_post_collect, passes=1)
+
+    tiny_src = np.zeros(16, np.float32)   # one 64-byte mailbox slot
+    tiny_dst = np.empty_like(tiny_src)
+    lat = []
+    for _ in range(max(iters, 3)):
+        t0 = time.perf_counter()
+        for _ in range(1000):
+            np.copyto(tiny_dst, tiny_src)
+        lat.append((time.perf_counter() - t0) / 1000)
+    return HardwareSpec(name, bw_comm=bw_comm,
+                        latency=float(np.median(lat)), th_cal=th_cal)
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    """Resolve a hardware name: a registered preset, or ``"measured"``
+    (probed once per process and cached)."""
+    if name in HARDWARE:
+        return HARDWARE[name]
+    if name == "measured":
+        if name not in _MEASURED:
+            _MEASURED[name] = measure_local_hardware()
+        return _MEASURED[name]
+    raise KeyError(f"unknown hardware {name!r}; known: "
+                   f"{sorted(HARDWARE) + ['measured']}")
+
 
 BIT_FP32 = 32
 

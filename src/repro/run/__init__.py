@@ -18,7 +18,10 @@ from repro.run.session import (
     build_mesh,
     build_partition,
     build_session,
+    resolve_auto,
 )
+from repro.run.sweep import product_overrides, sweep_one, sweep_rows
+from repro.run.tune import DEFAULT_AXES, audit_candidate, measure_epoch_s, tune
 from repro.run.cli import (
     LEGACY_ALIASES,
     add_spec_args,
@@ -42,6 +45,14 @@ __all__ = [
     "build_mesh",
     "build_partition",
     "build_session",
+    "resolve_auto",
+    "product_overrides",
+    "sweep_one",
+    "sweep_rows",
+    "DEFAULT_AXES",
+    "audit_candidate",
+    "measure_epoch_s",
+    "tune",
     "LEGACY_ALIASES",
     "add_spec_args",
     "legacy_overrides",

@@ -20,6 +20,7 @@ always semantically identical to a rebuild).
 
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -64,16 +65,63 @@ def build_graph(spec: RunSpec) -> Tuple[Any, np.ndarray]:
 
 def build_partition(spec: RunSpec, g) -> Any:
     """Partition the (already normalized) graph per the spec: a flat
-    ``PartitionedGraph`` or a two-level ``HierPartitionedGraph``."""
+    ``PartitionedGraph`` or a two-level ``HierPartitionedGraph``, with the
+    ``partition.refine`` post-pass (bucket-max hub rebalancing) applied to
+    the labels before the halo plans are built."""
     from repro.graph import (build_hierarchical_partitioned_graph,
                              build_partitioned_graph)
+    from repro.graph.partition import (partition_graph,
+                                       partition_hierarchical,
+                                       refine_bucket_max)
     ps = spec.partition
     if ps.hierarchical:
+        gsz = ps.resolved_group_size()
+        part = None
+        if ps.refine == "bucket-max":
+            part = partition_hierarchical(g, ps.groups, gsz, seed=ps.seed)
+            part = refine_bucket_max(g, part, nparts=ps.nparts,
+                                     group_size=gsz, seed=ps.seed)
         return build_hierarchical_partitioned_graph(
-            g, ps.groups, ps.resolved_group_size(),
-            strategy=ps.strategy, seed=ps.seed)
-    return build_partitioned_graph(g, ps.nparts, strategy=ps.strategy,
-                                   seed=ps.seed)
+            g, ps.groups, gsz, part=part, strategy=ps.strategy, seed=ps.seed)
+    part = None
+    if ps.refine == "bucket-max":
+        part = partition_graph(g, ps.nparts, seed=ps.seed)
+        part = refine_bucket_max(g, part, nparts=ps.nparts, seed=ps.seed)
+    return build_partitioned_graph(g, ps.nparts, part=part,
+                                   strategy=ps.strategy, seed=ps.seed)
+
+
+def resolve_auto(spec: RunSpec) -> RunSpec:
+    """The ``ExecSpec.auto`` resolution path: when ``exec.auto`` names a
+    tuner result file (``python -m repro.run.tune --out ...``), swap the
+    audited winner's partition + schedule sections into the caller's spec.
+    The caller keeps naming its graph/model/exec; the tuner owns the
+    performance knobs. Refuses a result tuned for a different graph
+    section — a stale auto file must fail loudly, not run the wrong
+    schedule silently."""
+    import dataclasses
+
+    from repro.run.spec import SpecError
+    if not spec.exec.auto:
+        return spec
+    path = spec.exec.auto
+    try:
+        with open(path) as f:
+            result = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SpecError(f"exec.auto: cannot read tuner result {path!r}: {e}")
+    winner = result.get("winner") or {}
+    if not winner.get("spec"):
+        raise SpecError(f"exec.auto: {path!r} carries no winner.spec "
+                        "(re-run repro.run.tune)")
+    tuned = RunSpec.from_dict(winner["spec"])
+    if tuned.graph.content_hash() != spec.graph.content_hash():
+        raise SpecError(
+            f"exec.auto: {path!r} was tuned for graph section "
+            f"{tuned.graph.content_hash()}, this spec builds "
+            f"{spec.graph.content_hash()} — re-tune for this graph")
+    return dataclasses.replace(spec, partition=tuned.partition,
+                               schedule=tuned.schedule).validate()
 
 
 def build_mesh(spec: RunSpec):
@@ -96,6 +144,7 @@ class BuildCache:
 
     graphs: Dict[str, Tuple[Any, np.ndarray]] = field(default_factory=dict)
     partitions: Dict[str, Any] = field(default_factory=dict)
+    pstats: Dict[str, Dict[str, Any]] = field(default_factory=dict)
 
     @staticmethod
     def _graph_key(spec: RunSpec) -> str:
@@ -116,6 +165,15 @@ class BuildCache:
         if key not in self.partitions:
             self.partitions[key] = build_partition(spec, g)
         return self.partitions[key]
+
+    def partition_stats(self, spec: RunSpec, g) -> Dict[str, Any]:
+        """``partition_stats`` for the spec's labels, cached alongside the
+        partition itself (sweep grids re-read it per schedule variant)."""
+        key = self._part_key(spec)
+        if key not in self.pstats:
+            from repro.graph.partition import partition_stats
+            self.pstats[key] = partition_stats(g, self.partition(spec, g).part)
+        return self.pstats[key]
 
 
 class Session:
@@ -217,6 +275,16 @@ class Session:
         """The partition's ``CommStats`` (per-strategy/per-stage volumes)."""
         return self.pg.stats
 
+    def partition_stats(self) -> Dict[str, Any]:
+        """``graph.partition.partition_stats`` for this session's labels
+        (cut fraction, load/size imbalance, padded-slot accounting incl.
+        ``agg_slot_imbalance`` and the stacked executed slots) — cached, so
+        end-of-run summaries and sweep rows don't re-derive it."""
+        if getattr(self, "_pstats", None) is None:
+            from repro.graph.partition import partition_stats
+            self._pstats = partition_stats(self.graph, self.pg.part)
+        return self._pstats
+
     def predicted_wire_bytes(self, feat_dim: Optional[int] = None
                              ) -> Dict[str, float]:
         """Per-stage predicted wire bytes per epoch under the schedule."""
@@ -291,7 +359,7 @@ def build_session(spec: RunSpec, cache: Optional[BuildCache] = None
     from repro.core.trainer import (_lift_worker_data,
                                     prepare_distributed_host)
 
-    spec.validate()
+    spec = resolve_auto(spec.validate())
     if cache is not None:
         g, x = cache.graph(spec)
         pg = cache.partition(spec, g)

@@ -183,6 +183,12 @@ class PartitionSpec(_SubSpec):
     strategy: str = "hybrid"   # hybrid | pre | post | vanilla
     groups: int = 0            # 0 = flat
     group_size: int = 0        # 0 = auto (nparts // groups)
+    # Post-pass over the partition labels: "bucket-max" runs
+    # refine_bucket_max (move hub rows off the worker defining each
+    # bucket's cross-worker padded-slot max — the stacked-ELL cost the
+    # balancer's total-slot objective misses); "none" keeps the raw
+    # partitioner output.
+    refine: str = "none"       # none | bucket-max
     seed: int = 0
 
     def validate(self) -> None:
@@ -192,6 +198,9 @@ class PartitionSpec(_SubSpec):
             raise SpecError(
                 f"partition.strategy must be hybrid|pre|post|vanilla, "
                 f"got {self.strategy!r}")
+        if self.refine not in ("none", "bucket-max"):
+            raise SpecError(f"partition.refine must be none|bucket-max, "
+                            f"got {self.refine!r}")
         if self.groups < 0 or self.group_size < 0:
             raise SpecError("partition.groups/group_size must be >= 0")
         if self.group_size and not self.groups:
@@ -315,6 +324,12 @@ class ExecSpec(_SubSpec):
     epochs: int = 50
     lr: float = 0.01
     seed: int = 0
+    # Auto-scheduler resolution: path to a tuner result JSON (written by
+    # ``python -m repro.run.tune --out ...``). ``build_session`` swaps in
+    # the audited winner's partition + schedule sections before building —
+    # the spec names its graph/model/exec and lets the tuner own the
+    # performance knobs. Empty = no resolution.
+    auto: str = ""
     log_every: int = 0         # 0 = auto (epochs // 10)
     nprocs: int = 0            # multiproc only: 0 = partition.nparts
     # Fault tolerance (multiproc supervision + checkpoint/resume):

@@ -2,12 +2,19 @@
 
 import numpy as np
 
+import pytest
+
 from repro.core.perf_model import (
     ABCI_XEON,
     FUGAKU_A64FX,
+    HARDWARE,
+    HardwareSpec,
     comm_time,
     delta_ratio,
     epoch_time_model,
+    get_hardware,
+    hier_epoch_time,
+    measure_local_hardware,
     quant_comm_time,
     speedup_model,
 )
@@ -98,3 +105,114 @@ class TestEpochModel:
         b32 = epoch_time_model(v, local, owned, 256, 256, 3, FUGAKU_A64FX, 0)
         b2 = epoch_time_model(v, local, owned, 256, 256, 3, FUGAKU_A64FX, 2)
         assert b2["comm"] < b32["comm"] / 8  # ~16x data reduction
+
+
+class TestHierEpochTime:
+    """The two-level model the auto-scheduler ranks candidates by."""
+
+    HW = FUGAKU_A64FX
+
+    def _model(self, P=8, intra=4e6, inter=8e6, nnz=20000, rows=4000,
+               layers=3, hw=None):
+        return hier_epoch_time(
+            intra, inter, local_nnz=np.full(P, nnz, float),
+            owned_rows=np.full(P, rows, float), feat_dim=128,
+            hidden_dim=256, num_layers=layers, hw=hw or self.HW)
+
+    def test_hand_computed_small_case(self):
+        """One worker, closed form: every term reproduced by hand."""
+        hw = HardwareSpec("unit", bw_comm=1e9, latency=0.0, th_cal=1e12)
+        m = hier_epoch_time(1e6, 2e6, local_nnz=[1000.0],
+                            owned_rows=[100.0], feat_dim=128,
+                            hidden_dim=256, num_layers=2, hw=hw)
+        f = 256.0  # max(feat, hidden)
+        t_aggr = 1000 * f * 4 / 1e12 * 2
+        t_nn = 100 * f * 256 * 2 / (1e12 * 4) * 2
+        t_intra = 1e6 / (1e9 * 8) * 2
+        t_inter = 2e6 / 1e9 * 2
+        np.testing.assert_allclose(m["aggr"], t_aggr, rtol=1e-12)
+        np.testing.assert_allclose(m["nn"], t_nn, rtol=1e-12)
+        np.testing.assert_allclose(m["intra"], t_intra, rtol=1e-12)
+        np.testing.assert_allclose(m["inter"], t_inter, rtol=1e-12)
+        np.testing.assert_allclose(
+            m["sequential"], t_aggr + t_nn + t_intra + t_inter, rtol=1e-12)
+        exposed = max(0.0, t_inter - (t_aggr + t_intra))
+        np.testing.assert_allclose(
+            m["overlap"], t_aggr + t_nn + t_intra + exposed, rtol=1e-12)
+
+    def test_monotone_in_worker_count(self):
+        """Strong scaling: same total work over more workers -> faster
+        (both with and without overlap)."""
+        total_nnz, total_rows, total_inter = 1e6, 2e5, 64e6
+        prev_seq = prev_ovl = np.inf
+        for P in (4, 8, 16, 32):
+            m = hier_epoch_time(
+                total_inter / P / 4, total_inter / P,
+                local_nnz=np.full(P, total_nnz / P),
+                owned_rows=np.full(P, total_rows / P),
+                feat_dim=128, hidden_dim=256, num_layers=3, hw=self.HW)
+            assert m["sequential"] < prev_seq
+            assert m["overlap"] < prev_ovl
+            prev_seq, prev_ovl = m["sequential"], m["overlap"]
+
+    def test_monotone_in_inter_bytes(self):
+        """More slow-wire bytes never makes the epoch faster, and the
+        sequential time grows strictly."""
+        seqs, ovls = [], []
+        for inter in (1e6, 4e6, 16e6, 64e6):
+            m = self._model(inter=inter)
+            seqs.append(m["sequential"])
+            ovls.append(m["overlap"])
+        assert all(a < b for a, b in zip(seqs, seqs[1:]))
+        assert all(a <= b + 1e-15 for a, b in zip(ovls, ovls[1:]))
+
+    def test_quantized_wire_ranks_faster(self):
+        """Int2 vs fp32 inter bytes (the schedule folds bits into the
+        byte counts): 1/16 the bytes must model strictly faster
+        sequentially — the ordering the tuner's ranking relies on."""
+        m32 = self._model(inter=64e6)
+        m2 = self._model(inter=64e6 / 16)
+        assert m2["sequential"] < m32["sequential"]
+        np.testing.assert_allclose(m2["inter"], m32["inter"] / 16,
+                                   rtol=1e-12)
+
+    def test_overlap_hides_covered_wire(self):
+        """When aggregation + intra covers the inter wire, overlap removes
+        it from the critical path entirely."""
+        m = self._model(intra=1e6, inter=2e6, nnz=400000)
+        assert m["aggr"] + m["intra"] >= m["inter"]
+        np.testing.assert_allclose(
+            m["overlap"], m["aggr"] + m["nn"] + m["intra"], rtol=1e-12)
+        assert m["overlap"] < m["sequential"]
+        assert m["inter_hidden_fraction"] == 1.0
+
+    def test_overlap_exposes_remainder(self):
+        """When the inter wire exceeds the compute window, only the
+        remainder stays on the critical path — strictly less than the
+        sequential schedule pays."""
+        m = self._model(intra=1e6, inter=10e6, nnz=100000)
+        exposed = m["overlap"] - (m["aggr"] + m["nn"] + m["intra"])
+        assert exposed > 0
+        np.testing.assert_allclose(
+            exposed, m["inter"] - (m["aggr"] + m["intra"]), rtol=1e-12)
+        assert m["overlap"] < m["sequential"]
+        assert 0.0 < m["inter_hidden_fraction"] < 1.0
+
+
+class TestHardwareRegistry:
+    def test_presets_registered(self):
+        for name in ("abci-xeon6148", "fugaku-a64fx", "tpu-v5e-ici"):
+            assert get_hardware(name) is HARDWARE[name]
+
+    def test_unknown_name_lists_known(self):
+        with pytest.raises(KeyError, match="fugaku-a64fx"):
+            get_hardware("cray-1")
+
+    def test_measured_probe_sane_and_cached(self):
+        hw = measure_local_hardware(size_mb=4, iters=2)
+        assert hw.bw_comm > 1e8          # >0.1 GB/s memory fabric
+        assert hw.th_cal >= hw.bw_comm   # copy beats post+collect
+        assert 0 < hw.latency < 1e-3     # a tiny copy is not milliseconds
+        assert hw.beta > 0
+        first = get_hardware("measured")
+        assert get_hardware("measured") is first  # probed once, cached

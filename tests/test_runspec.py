@@ -81,8 +81,9 @@ class TestContentHash:
         # invalidates recorded artifacts and should be a conscious act.
         # (PR 7 added exec.nprocs, rehashing from rs-408ff1e8bfd8; PR 8
         # added exec.ckpt_every/max_restarts/heartbeat_s, rehashing from
-        # rs-d87a4352cce8.)
-        assert RunSpec().content_hash() == "rs-58ae58fdfdbc"
+        # rs-d87a4352cce8; PR 9 added partition.refine + exec.auto,
+        # rehashing from rs-58ae58fdfdbc.)
+        assert RunSpec().content_hash() == "rs-f356a4f93c9f"
 
     def test_sub_spec_hashes(self):
         # Per-section hashes: kind-prefixed, content-addressed, and only

@@ -1,0 +1,243 @@
+"""Auto-scheduler: bucket-max partition refinement, the sweep engine,
+the audit-gated tuner, and the ``exec.auto`` resolution path."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.graph import partition_stats, rmat_graph
+from repro.graph.partition import (
+    _bucket_counts,
+    _local_in_degrees,
+    bucket_padded_degrees,
+    group_of,
+    partition_graph,
+    partition_hierarchical,
+    refine_bucket_max,
+    stacked_executed_slots,
+)
+from repro.run import BuildCache, RunSpec, SpecError, build_partition, resolve_auto
+from repro.run.sweep import parse_axis, product_overrides, sweep_rows
+from repro.run.tune import tune
+
+
+def _stacked(g, part, nparts):
+    padded = bucket_padded_degrees(_local_in_degrees(g, part))
+    ks, counts = _bucket_counts(padded, part, nparts)
+    return stacked_executed_slots(counts, ks)
+
+
+class TestRefineBucketMax:
+    def _graph(self, scale=9, seed=4):
+        return rmat_graph(scale, 6, seed=seed)
+
+    def test_never_worse_and_valid(self):
+        g = self._graph()
+        for nparts in (2, 4):
+            part = partition_graph(g, nparts, seed=0)
+            out = refine_bucket_max(g, part, nparts=nparts, seed=0)
+            assert out.shape == part.shape
+            assert out.min() >= 0 and out.max() < nparts
+            assert _stacked(g, out, nparts) <= _stacked(g, part, nparts)
+            # input labelling untouched (refine copies)
+            assert part.max() < nparts
+
+    def test_reduces_stacked_slots_hier(self):
+        """The R-MAT hub skew leaves one worker defining most bucket
+        maxima; moving hubs off it must strictly shrink the stacked
+        executed slots (the quantity every worker pays)."""
+        g = self._graph()
+        part = partition_hierarchical(g, 2, 2, seed=0)
+        out = refine_bucket_max(g, part, nparts=4, group_size=2, seed=0)
+        before, after = _stacked(g, part, 4), _stacked(g, out, 4)
+        assert after < before
+        ps_b = partition_stats(g, part)
+        ps_a = partition_stats(g, out)
+        assert ps_a["agg_stacked_slots"] == after
+        assert ps_a["agg_slot_imbalance"] <= ps_b["agg_slot_imbalance"]
+
+    def test_group_structure_preserved(self):
+        """Hierarchical moves stay inside the worker's group — the
+        two-level halo plans depend on the group labelling."""
+        g = self._graph()
+        part = partition_hierarchical(g, 2, 2, seed=0)
+        out = refine_bucket_max(g, part, nparts=4, group_size=2, seed=0)
+        assert np.array_equal(group_of(out, 2), group_of(part, 2))
+        assert np.any(out != part)  # it did move something
+
+    def test_load_cap_respected(self):
+        """A part's weighted load only grows while it stays under the
+        imbalance cap — moves can shrink a part freely but never push a
+        target past max(its input load, cap)."""
+        from repro.graph.partition import default_node_weights
+        g = self._graph()
+        nparts = 4
+        part = partition_graph(g, nparts, seed=0)
+        out = refine_bucket_max(g, part, nparts=nparts, imbalance=1.10,
+                                seed=0)
+        w = default_node_weights(g)
+        cap = w.sum() / nparts * 1.10
+        for p in range(nparts):
+            before = w[part == p].sum()
+            after = w[out == p].sum()
+            assert after <= max(before, cap) + 1e-9
+
+
+class TestPartitionSpecRefine:
+    BASE = ["graph.source=rmat", "graph.scale=9", "graph.edge_factor=6",
+            "graph.seed=4", "graph.feat_dim=8", "graph.features=random",
+            "graph.classes=4", "graph.norm=mean",
+            "partition.nparts=4", "partition.groups=2"]
+
+    def test_refine_reduces_stacked_slots_via_session(self):
+        cache = BuildCache()
+        spec0 = RunSpec().with_overrides(self.BASE)
+        spec1 = spec0.with_overrides(["partition.refine=bucket-max"])
+        g, _ = cache.graph(spec0)
+        ps0 = cache.partition_stats(spec0, g)
+        ps1 = cache.partition_stats(spec1, g)
+        assert ps1["agg_stacked_slots"] < ps0["agg_stacked_slots"]
+        assert ps1["agg_slot_imbalance"] <= ps0["agg_slot_imbalance"]
+
+    def test_refine_changes_hash_and_flat_path(self):
+        spec0 = RunSpec().with_overrides(self.BASE + ["partition.groups=0"])
+        spec1 = spec0.with_overrides(["partition.refine=bucket-max"])
+        assert spec0.content_hash() != spec1.content_hash()
+        cache = BuildCache()
+        g, _ = cache.graph(spec0)
+        pg = build_partition(spec1, g)
+        assert pg.nparts == 4
+
+    def test_unknown_refine_rejected(self):
+        with pytest.raises(SpecError, match="refine"):
+            RunSpec().with_overrides(["partition.refine=magic"])
+
+
+class TestSweepEngine:
+    BASE = TestPartitionSpecRefine.BASE
+
+    def test_parse_axis(self):
+        path, vals = parse_axis("schedule.inter_bits=0,2,null")
+        assert path == "schedule.inter_bits"
+        assert vals == [0, 2, None]
+        path, vals = parse_axis("partition.refine=none,bucket-max")
+        assert vals == ["none", "bucket-max"]
+        with pytest.raises(SpecError):
+            parse_axis("no-equals-sign")
+
+    def test_product_overrides(self):
+        sets = product_overrides(["a.b=1,2", "c.d=x"])
+        assert sets == [['a.b=1', 'c.d="x"'], ['a.b=2', 'c.d="x"']]
+
+    def test_rows_keyed_by_hash_and_cache_shared(self):
+        base = RunSpec().with_overrides(self.BASE)
+        cache = BuildCache()
+        rows, invalid = sweep_rows(
+            base, product_overrides(["schedule.inter_bits=0,2",
+                                     "schedule.overlap=true,false"]),
+            cache=cache)
+        assert not invalid
+        assert len(rows) == 4
+        hashes = {r["spec_hash"] for r in rows}
+        assert len(hashes) == 4
+        for r in rows:
+            spec = RunSpec.from_dict(r["spec"])
+            assert spec.content_hash() == r["spec_hash"]
+            assert r["modelled_epoch_s"] > 0
+            assert "agg_slot_imbalance" in r["partition_stats"]
+        # schedule-only axes: one graph + one partition built, not four
+        assert len(cache.graphs) == 1
+        assert len(cache.partitions) == 1
+
+    def test_invalid_combos_recorded_not_fatal(self):
+        base = RunSpec().with_overrides(self.BASE + ["partition.groups=0"])
+        rows, invalid = sweep_rows(
+            base, product_overrides(["schedule.inter_bits=0,2"]))
+        assert not rows
+        assert len(invalid) == 2
+        assert all("inter_bits" in e["error"] for e in invalid)
+
+    def test_overlap_modelled_no_slower_than_sequential(self):
+        base = RunSpec().with_overrides(self.BASE)
+        rows, _ = sweep_rows(base,
+                             product_overrides(["schedule.overlap=true,false"]))
+        by_overlap = {r["overlap"]: r for r in rows}
+        assert (by_overlap[True]["modelled_epoch_s"]
+                <= by_overlap[False]["modelled_epoch_s"])
+
+
+class TestTune:
+    BASE = TestPartitionSpecRefine.BASE
+
+    def test_modelled_only_tune_picks_ranked_best(self):
+        base = RunSpec().with_overrides(self.BASE)
+        result = tune(base, axes=["partition.refine=none,bucket-max",
+                                  "schedule.inter_bits=0,2"],
+                      top_k=2, probe_mode="none", audit=False)
+        assert result["winner"] is not None
+        ranked = result["rows"]
+        assert ranked == sorted(ranked, key=lambda r: r["modelled_epoch_s"])
+        assert (result["winner"]["modelled_epoch_s"]
+                == ranked[0]["modelled_epoch_s"])
+        # the base spec itself is always a candidate
+        assert any(r["overrides"] == [] for r in ranked)
+        # winner.spec reconstructs to the winning hash
+        w = RunSpec.from_dict(result["winner"]["spec"])
+        assert w.content_hash() == result["winner"]["spec_hash"]
+
+    @pytest.mark.slow
+    def test_audit_gate_certifies_winner(self):
+        base = RunSpec().with_overrides(self.BASE)
+        result = tune(base, axes=["schedule.inter_bits=0,2"],
+                      top_k=1, probe_mode="none", audit=True, audit_steps=2)
+        w = result["winner"]
+        assert w is not None and w["audit"]["clean"]
+        assert w["audit"]["ran"]  # the HLO rules actually executed
+
+
+class TestResolveAuto:
+    BASE = TestPartitionSpecRefine.BASE
+
+    def _tuned_file(self, tmp_path, base):
+        result = tune(base, axes=["partition.refine=none,bucket-max"],
+                      top_k=1, probe_mode="none", audit=False)
+        path = tmp_path / "tuned.json"
+        path.write_text(json.dumps(result))
+        return str(path), result
+
+    def test_winner_sections_swapped_in(self, tmp_path):
+        base = RunSpec().with_overrides(self.BASE)
+        path, result = self._tuned_file(tmp_path, base)
+        spec = base.with_overrides([f"exec.auto={path}"])
+        resolved = resolve_auto(spec)
+        tuned = RunSpec.from_dict(result["winner"]["spec"])
+        assert resolved.partition == tuned.partition
+        assert resolved.schedule == tuned.schedule
+        # caller keeps its graph/model/exec sections
+        assert resolved.graph == base.graph
+        assert resolved.exec.auto == path
+
+    def test_graph_mismatch_rejected(self, tmp_path):
+        base = RunSpec().with_overrides(self.BASE)
+        path, _ = self._tuned_file(tmp_path, base)
+        other = base.with_overrides(["graph.scale=8", f"exec.auto={path}"])
+        with pytest.raises(SpecError, match="graph"):
+            resolve_auto(other)
+
+    def test_missing_winner_rejected(self, tmp_path):
+        p = tmp_path / "empty.json"
+        p.write_text(json.dumps({"rows": []}))
+        spec = RunSpec().with_overrides(self.BASE + [f"exec.auto={p}"])
+        with pytest.raises(SpecError, match="winner"):
+            resolve_auto(spec)
+
+    def test_unreadable_file_rejected(self, tmp_path):
+        spec = RunSpec().with_overrides(
+            self.BASE + [f"exec.auto={tmp_path}/nope.json"])
+        with pytest.raises(SpecError, match="cannot read"):
+            resolve_auto(spec)
+
+    def test_no_auto_is_identity(self):
+        spec = RunSpec().with_overrides(self.BASE)
+        assert resolve_auto(spec) is spec
