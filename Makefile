@@ -1,7 +1,7 @@
 # Tier-1 verification (same command as ROADMAP.md).
 PY ?= python
 
-.PHONY: check check-fast check-overlap audit spec-matrix bench-comm bench-comm-sweep bench-agg bench-scaling-measured chaos-smoke tune-smoke
+.PHONY: check check-fast check-overlap audit spec-matrix bench-comm bench-comm-sweep bench-agg bench-scaling-measured chaos-smoke tune-smoke serve-smoke
 
 check:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -14,9 +14,13 @@ check-fast:
 # lowered HLO must issue the inter-stage wire collectives before the
 # bucketed-aggregation dots (exits non-zero otherwise). Served by the
 # auditor's overlap-order rule (repro.analysis) since PR 6.
+# DRYRUN_OUT keeps the CI-run artifact out of the gitignored
+# experiments/dryrun/ scratch dir (the dryrun CLI honors --out).
+DRYRUN_OUT ?= /tmp/repro-dryrun
 check-overlap:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.dryrun \
-		--gcn --groups 2 --scale 10 --chips 8 --overlap --assert-overlap
+		--gcn --groups 2 --scale 10 --chips 8 --overlap --assert-overlap \
+		--out $(DRYRUN_OUT)
 
 # The static-analysis gate: every HLO rule (overlap-order, wire-dtype,
 # replica-groups, predicted-bytes, retrace-guard) plus the Python AST lint
@@ -83,3 +87,15 @@ TUNER_FLAGS ?=
 tune-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/tuner.py \
 		--quick --out $(TUNER_OUT) $(TUNER_FLAGS)
+
+# Online-serving smoke: build the flagship serve graph, train 2 epochs,
+# checkpoint, restore into the server, answer 64 requests through the
+# batched block-diagonal path, and assert (a) p99 latency under the
+# bound and (b) full-fanout served logits bit-identical to the
+# full-batch forward. The JSON report is the checked-in
+# experiments/BENCH_serving.json format. SERVE_FLAGS adds e.g. --quick.
+SERVE_OUT ?= experiments/BENCH_serving.json
+SERVE_FLAGS ?=
+serve-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) benchmarks/serving.py \
+		--check --out $(SERVE_OUT) $(SERVE_FLAGS)

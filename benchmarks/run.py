@@ -6,6 +6,7 @@
   Figs 9/10 -> scaling.py      (epoch time w/ & w/o comm opts + measured)
   Fig 11/Table 3 -> convergence.py (FP32/Int2 x LP accuracy + cd-5 baseline)
   Fig 12  -> breakdown.py      (time breakdown, small vs large scale)
+  Serving -> serving.py        (online inference latency/QPS + bit-parity)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
@@ -17,7 +18,7 @@ import sys
 import time
 
 MODULES = ["aggregation", "comm_volume", "speedup_model", "scaling",
-           "convergence", "breakdown", "bits_ablation"]
+           "convergence", "breakdown", "bits_ablation", "serving"]
 
 
 def main() -> None:

@@ -1,0 +1,265 @@
+"""Online-serving benchmark: latency, throughput, cache, and bit-parity.
+
+The end-to-end serving smoke the ROADMAP's production north-star asks for:
+train the flagship serve spec for a couple of epochs, checkpoint, restore
+the parameters into a :class:`repro.serve.GNNServer`, and answer a closed
+burst of N single-node requests through the batched block-diagonal
+bucketed-ELL path. Rows:
+
+* ``batched`` vs ``unbatched`` — p50/p99 latency and QPS for the same
+  request stream, one dispatch per batch vs one per request;
+* ``cold`` vs ``warm`` cache — the same burst replayed against a cold and
+  a warmed staleness-controlled feature cache, with hit/miss counters;
+* ``staleness`` — feature-store writes between batches; asserts every
+  served remote feature's age stayed <= ``serve.max_staleness``;
+* ``parity`` — full-fanout served logits compared **bit-for-bit**
+  (``np.array_equal``) against the full-batch forward on the same nodes,
+  plus the retrace guard (compiled programs <= shape classes touched).
+
+``--check`` exits non-zero when parity fails, the staleness bound is
+violated, or p99 exceeds ``--p99-budget-ms``. Writes the checked-in
+``experiments/BENCH_serving.json``.
+
+  PYTHONPATH=src python benchmarks/serving.py \\
+      --check --out experiments/BENCH_serving.json [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import numpy as np
+
+SPEC_PATH = ROOT / "specs" / "serve_flagship.json"
+
+
+def _percentiles(lat_s):
+    ms = np.asarray(lat_s) * 1e3
+    return (round(float(np.percentile(ms, 50)), 3),
+            round(float(np.percentile(ms, 99)), 3))
+
+
+def _requests(n, num_nodes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[int(v)] for v in rng.integers(0, num_nodes, size=n)]
+
+
+def _closed_burst(server, requests, batch_size):
+    """All requests arrive at t=0; a request's latency is burst start ->
+    its dispatch completion. Returns (per-request latencies, wall)."""
+    lat = []
+    t0 = time.perf_counter()
+    if batch_size <= 1:
+        for r in requests:
+            server.serve(r)
+            lat.append(time.perf_counter() - t0)
+    else:
+        for i in range(0, len(requests), batch_size):
+            chunk = requests[i: i + batch_size]
+            server.serve_batch(chunk)
+            lat.extend([time.perf_counter() - t0] * len(chunk))
+    return lat, time.perf_counter() - t0
+
+
+def run_bench(requests_n: int = 64, epochs: int = 2, quick: bool = False,
+              seed: int = 0) -> dict:
+    from repro.run.session import build_session
+    from repro.serve import ServeSpec, build_server
+
+    spec = ServeSpec.load(SPEC_PATH)
+    if quick:
+        spec = spec.with_overrides(["graph.nodes=128", "partition.nparts=4",
+                                    "partition.groups=0",
+                                    "schedule.inter_bits=null",
+                                    "schedule.inter_cd=null",
+                                    "serve.min_nodes=32"])
+        requests_n = min(requests_n, 32)
+
+    report = {
+        "bench": "online_serving",
+        "generated_unix": int(time.time()),
+        "spec_hash": spec.content_hash(),
+        "spec": spec.describe(),
+        "requests": requests_n,
+        "train_epochs": epochs,
+        "rows": [],
+        "ok": True,
+    }
+
+    with tempfile.TemporaryDirectory(prefix="serve-bench-ckpt-") as ckpt:
+        # train -> checkpoint (meta carries the graph hash the server
+        # verifies on restore)
+        session = build_session(spec.run)
+        try:
+            session.fit(epochs=epochs, log_every=0, ckpt_dir=ckpt)
+        finally:
+            session.close()
+        spec = spec.with_overrides([f"serve.ckpt={ckpt}"])
+        server = build_server(spec)
+        n = server.graph.num_nodes
+        b = spec.serve.batch_size
+        requests = _requests(requests_n, n, seed)
+
+        # Warm the jit caches (compile cost is a build-time property, not
+        # a steady-state latency; the retrace guard below still counts it).
+        server.serve_batch(requests[: b + 1])
+
+        lat, wall = _closed_burst(server, requests, b)
+        p50, p99 = _percentiles(lat)
+        report["rows"].append({
+            "name": "batched", "batch_size": b,
+            "p50_ms": p50, "p99_ms": p99,
+            "qps": round(requests_n / wall, 1),
+            "dispatches": int(np.ceil(requests_n / b)),
+        })
+        report["compiled_programs"] = server.compiled_programs()
+        report["shape_ladder"] = server.stats()["shape_ladder"]
+
+        unb = build_server(spec)
+        unb.serve([0])  # warm
+        lat_u, wall_u = _closed_burst(unb, requests, 1)
+        p50u, p99u = _percentiles(lat_u)
+        report["rows"].append({
+            "name": "unbatched", "batch_size": 1,
+            "p50_ms": p50u, "p99_ms": p99u,
+            "qps": round(requests_n / wall_u, 1),
+            "dispatches": requests_n,
+        })
+        report["batched_speedup"] = round(wall_u / wall, 2)
+
+        # Cold vs warm cache: same burst, cache empty vs pre-touched.
+        # Compile is warmed first and the cache dropped, so the cold row
+        # measures remote-feature fetches, not jit tracing.
+        cold = build_server(spec)
+        cold.serve_batch(requests)
+        cold.cache.clear()
+        c0 = dict(cold.cache.stats())
+        t0 = time.perf_counter()
+        cold.serve_batch(requests)
+        cold_s = time.perf_counter() - t0
+        c1 = cold.cache.stats()
+        report["rows"].append({
+            "name": "cache_cold",
+            "wall_ms": round(cold_s * 1e3, 3),
+            "hits": c1["hits"] - c0["hits"],
+            "misses": c1["misses"] - c0["misses"],
+        })
+        t0 = time.perf_counter()
+        cold.serve_batch(requests)  # warm replay: rows already cached
+        warm_s = time.perf_counter() - t0
+        c2 = cold.cache.stats()
+        report["rows"].append({
+            "name": "cache_warm",
+            "wall_ms": round(warm_s * 1e3, 3),
+            "hits": c2["hits"] - c1["hits"],
+            "misses": c2["misses"] - c1["misses"],
+        })
+
+        # Staleness bound under store churn: writers advance the feature
+        # store between batches; every cached row served must be younger
+        # than the knob.
+        churn = build_server(spec)
+        rng = np.random.default_rng(seed + 1)
+        for i in range(0, len(requests), b):
+            churn.serve_batch(requests[i: i + b])
+            ids = rng.integers(0, n, size=8)
+            churn.cache.update_features(
+                ids, rng.normal(size=(8, churn.cache.store.shape[1]))
+                .astype(np.float32))
+        cs = churn.cache.stats()
+        stale_ok = cs["max_age_served"] <= spec.serve.max_staleness
+        report["rows"].append({
+            "name": "staleness",
+            "max_staleness": spec.serve.max_staleness,
+            "max_age_served": cs["max_age_served"],
+            "refreshes": cs["refreshes"],
+            "within_bound": bool(stale_ok),
+        })
+        report["ok"] &= stale_ok
+
+        # The correctness row: full-fanout served logits vs the
+        # full-batch forward, exact equality.
+        probe = [int(v) for v in
+                 np.random.default_rng(seed + 2).integers(0, n, size=8)]
+        ref = server.full_batch_logits()
+        served = np.concatenate(
+            [server.serve_batch([[t] for t in probe])[i]
+             for i in range(len(probe))])
+        bit_identical = bool(np.array_equal(served, ref[np.asarray(probe)]))
+        ladder_len = len(report["shape_ladder"]["degree_ladder"])
+        retrace_ok = report["compiled_programs"] <= ladder_len
+        report["rows"].append({
+            "name": "parity",
+            "probe_nodes": probe,
+            "bit_identical": bit_identical,
+            "compiled_programs": report["compiled_programs"],
+            "retrace_bound": ladder_len,
+            "retrace_ok": bool(retrace_ok),
+        })
+        report["ok"] &= bit_identical and retrace_ok
+        report["cache"] = server.cache.stats()
+    return report
+
+
+def run():
+    """Harness entry (benchmarks/run.py): quick rows, CSV schema."""
+    rep = run_bench(requests_n=16, epochs=1, quick=True)
+    for row in rep["rows"]:
+        if "p50_ms" in row:
+            yield {"name": f"serving/{row['name']}",
+                   "us_per_call": row["p50_ms"] * 1e3,
+                   "derived": f"p99_ms={row['p99_ms']};qps={row['qps']}"}
+        elif row["name"] == "parity":
+            yield {"name": "serving/parity",
+                   "us_per_call": 0,
+                   "derived": f"bit_identical={row['bit_identical']}"}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--out", default="",
+                    help="write the JSON report here")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized graph and request count")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on parity/staleness/p99 failure")
+    ap.add_argument("--p99-budget-ms", type=float, default=2000.0,
+                    help="with --check: batched p99 latency bound")
+    args = ap.parse_args()
+
+    rep = run_bench(requests_n=args.requests, epochs=args.epochs,
+                    quick=args.quick)
+    for row in rep["rows"]:
+        print(json.dumps(row))
+    batched = next(r for r in rep["rows"] if r["name"] == "batched")
+    parity = next(r for r in rep["rows"] if r["name"] == "parity")
+    print(f"batched p50={batched['p50_ms']}ms p99={batched['p99_ms']}ms "
+          f"qps={batched['qps']} speedup_vs_unbatched="
+          f"{rep['batched_speedup']}x")
+    print(f"parity bit_identical={parity['bit_identical']} "
+          f"compiled_programs={parity['compiled_programs']}"
+          f"<={parity['retrace_bound']}")
+    if args.check:
+        rep["ok"] &= batched["p99_ms"] <= args.p99_budget_ms
+        rep["p99_budget_ms"] = args.p99_budget_ms
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rep, indent=1) + "\n")
+        print(f"wrote {out}")
+    if args.check and not rep["ok"]:
+        raise SystemExit("serving smoke FAILED (parity/staleness/p99)")
+
+
+if __name__ == "__main__":
+    main()

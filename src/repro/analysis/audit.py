@@ -43,6 +43,21 @@ DEFAULT_SPEC_DIR = "specs"
 DEFAULT_LINT_PATHS = ("src/repro",)
 
 
+def _load_run_spec(path: Path):
+    """Load a spec file's RunSpec — directly, or the embedded ``run``
+    section when the file is a ServeSpec (the HLO rules audit the
+    training program a serving deployment's parameters come from)."""
+    import json
+
+    from repro.run.spec import RunSpec
+    from repro.serve.spec import is_serve_spec_dict
+    d = json.loads(Path(path).read_text())
+    if is_serve_spec_dict(d):
+        from repro.serve.spec import ServeSpec
+        return ServeSpec.from_dict(d).run
+    return RunSpec.from_dict(d)
+
+
 def audit_spec(spec, spec_name: str = "",
                rule_ids: Optional[Sequence[str]] = None,
                steps: int = 3) -> Dict[str, Any]:
@@ -87,7 +102,7 @@ def audit_paths(spec_paths: Sequence[Path],
         t0 = time.time()
         rec: Dict[str, Any] = {"spec": path.name, "path": str(path)}
         try:
-            spec = RunSpec.load(path)
+            spec = _load_run_spec(path)
             rec["hash"] = spec.content_hash()
             res = audit_spec(spec, spec_name=path.name,
                              rule_ids=rule_ids, steps=steps)

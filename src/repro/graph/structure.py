@@ -146,6 +146,41 @@ class Graph:
         return coo_to_csr(self.src, self.dst, self.edge_weight, self.num_nodes, self.num_nodes)
 
 
+def block_diag_csrs(csrs: Sequence[CSR]) -> CSR:
+    """Merge CSRs into one block-diagonal operator (no cross-block edges).
+
+    Block b's rows land at ``sum(num_rows[:b])`` and its column ids shift by
+    ``sum(num_cols[:b])``, so aggregating the concatenated feature rows with
+    the merged layout equals aggregating each block independently — the
+    packing the serving batcher (and any many-small-graphs workload) uses
+    to push B irregular graphs through one bucketed-ELL dispatch. Per-row
+    neighbour order is preserved exactly, which is what keeps the packed
+    reduction bit-identical to the per-graph one.
+    """
+    if not csrs:
+        return CSR(np.zeros(1, np.int64), np.zeros(0, np.int32),
+                   np.zeros(0, np.float32), 0, 0)
+    indptr = [np.zeros(1, np.int64)]
+    indices: List[np.ndarray] = []
+    weights: List[np.ndarray] = []
+    row_off = 0
+    col_off = 0
+    nnz_off = 0
+    for c in csrs:
+        indptr.append(np.asarray(c.indptr[1:], np.int64) + nnz_off)
+        indices.append(np.asarray(c.indices, np.int32) + col_off)
+        weights.append(np.asarray(c.weights, np.float32))
+        row_off += c.num_rows
+        col_off += c.num_cols
+        nnz_off += c.nnz
+    return CSR(indptr=np.concatenate(indptr),
+               indices=(np.concatenate(indices) if indices
+                        else np.zeros(0, np.int32)),
+               weights=(np.concatenate(weights) if weights
+                        else np.zeros(0, np.float32)),
+               num_rows=row_off, num_cols=col_off)
+
+
 def transpose_csr(csr: CSR) -> CSR:
     """The reverse-graph CSR: out_t[c] = sum over entries (r, c, w) of w*g[r].
 

@@ -8,6 +8,7 @@ from repro.kernels.ops import (
     bucketed_aggregate,
     dequantize_unpack,
     device_bucketed,
+    padded_device_bucketed,
     quantize_pack,
 )
 
@@ -16,6 +17,7 @@ __all__ = [
     "aggregate",
     "bucketed_aggregate",
     "device_bucketed",
+    "padded_device_bucketed",
     "quantize_pack",
     "dequantize_unpack",
 ]

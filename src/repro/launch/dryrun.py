@@ -27,6 +27,7 @@ import json
 import time
 import traceback
 from pathlib import Path
+from typing import Optional
 
 import jax
 
@@ -195,7 +196,9 @@ def build_lowered(arch_name: str, shape_name: str, mesh):
 
 def run_one(arch_name: str, shape_name: str, multi_pod: bool,
             save: bool = True, hlo_out: bool = False,
-            extrapolate: bool = None) -> dict:
+            extrapolate: bool = None,
+            out_dir: Optional[Path] = None) -> dict:
+    out_dir = Path(out_dir) if out_dir else OUT_DIR
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
            "chips": 512 if multi_pod else 256, "status": "ok"}
@@ -206,7 +209,7 @@ def run_one(arch_name: str, shape_name: str, multi_pod: bool,
         if lowered is None:
             rec["status"] = "skip"
             rec["skip_reason"] = meta
-            return _finish(rec, t0, save)
+            return _finish(rec, t0, save, out_dir)
         rec.update(meta)
         t1 = time.time()
         compiled = lowered.compile()
@@ -221,7 +224,8 @@ def run_one(arch_name: str, shape_name: str, multi_pod: bool,
         rec["hlo_analysis"] = analyze_hlo(hlo)
         rec["hlo_bytes"] = len(hlo)
         if hlo_out:
-            (OUT_DIR / f"{arch_name}__{shape_name}__{mesh_name}.hlo").write_text(hlo)
+            out_dir.mkdir(parents=True, exist_ok=True)
+            (out_dir / f"{arch_name}__{shape_name}__{mesh_name}.hlo").write_text(hlo)
         print(compiled.memory_analysis())
         ca = rec["cost"]
         print(f"  flops={ca.get('flops', 0):.3e} bytes={ca.get('bytes accessed', 0):.3e} "
@@ -230,14 +234,16 @@ def run_one(arch_name: str, shape_name: str, multi_pod: bool,
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-3000:]
-    return _finish(rec, t0, save)
+    return _finish(rec, t0, save, out_dir)
 
 
-def _finish(rec: dict, t0: float, save: bool) -> dict:
+def _finish(rec: dict, t0: float, save: bool,
+            out_dir: Optional[Path] = None) -> dict:
+    out_dir = Path(out_dir) if out_dir else OUT_DIR
     rec["total_s"] = round(time.time() - t0, 2)
     if save:
-        OUT_DIR.mkdir(parents=True, exist_ok=True)
-        path = OUT_DIR / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+        out_dir.mkdir(parents=True, exist_ok=True)
+        path = out_dir / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
         path.write_text(json.dumps(rec, indent=1, default=str))
     tag = rec["status"].upper()
     print(f"[{tag}] {rec['arch']} x {rec['shape']} on {rec['mesh']} "
@@ -261,7 +267,8 @@ def gcn_base_spec(nparts: int, scale: int = 13) -> "RunSpec":
 
 
 def run_gcn_dryrun(spec, mesh_name: str = None, save: bool = True,
-                   assert_overlap: bool = False) -> dict:
+                   assert_overlap: bool = False,
+                   out_dir: Optional[Path] = None) -> dict:
     """Dry-run the paper's distributed GCN trainer on the production mesh —
     ``build_session(spec).lower()`` plus the HLO analyses.
 
@@ -347,7 +354,7 @@ def run_gcn_dryrun(spec, mesh_name: str = None, save: bool = True,
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-3000:]
-    return _finish(rec, t0, save)
+    return _finish(rec, t0, save, out_dir)
 
 
 def main():
@@ -394,7 +401,13 @@ def main():
                          "issues the wire collectives before the "
                          "aggregation compute")
     ap.add_argument("--hlo-out", action="store_true")
+    ap.add_argument("--out", default="",
+                    help="artifact directory for the per-combo json/hlo "
+                         f"records (default: {OUT_DIR}) — point scratch "
+                         "runs at a tmp dir so ignored seed artifacts "
+                         "stop reappearing in experiments/dryrun/")
     args = ap.parse_args()
+    out_dir = Path(args.out) if args.out else None
 
     if args.gcn:
         nparts = args.chips or (512 if args.multi_pod else 256)
@@ -406,13 +419,16 @@ def main():
                      if not args.chips and spec.partition.nparts == nparts
                      else None)
         rec = run_gcn_dryrun(spec, mesh_name=mesh_name,
-                             assert_overlap=args.assert_overlap)
+                             assert_overlap=args.assert_overlap,
+                             out_dir=out_dir)
         raise SystemExit(0 if rec["status"] == "ok" else 1)
     if args.all:
         results = []
         for a in ARCH_NAMES:
             for s in INPUT_SHAPES:
-                results.append(run_one(a, s, args.multi_pod, hlo_out=args.hlo_out))
+                results.append(run_one(a, s, args.multi_pod,
+                                       hlo_out=args.hlo_out,
+                                       out_dir=out_dir))
         ok = sum(r["status"] == "ok" for r in results)
         skip = sum(r["status"] == "skip" for r in results)
         err = sum(r["status"] == "error" for r in results)
@@ -420,7 +436,8 @@ def main():
         raise SystemExit(1 if err else 0)
     if not (args.arch and args.shape):
         ap.error("need --arch and --shape (or --all / --gcn)")
-    rec = run_one(args.arch, args.shape, args.multi_pod, hlo_out=args.hlo_out)
+    rec = run_one(args.arch, args.shape, args.multi_pod,
+                  hlo_out=args.hlo_out, out_dir=out_dir)
     raise SystemExit(0 if rec["status"] in ("ok", "skip") else 1)
 
 

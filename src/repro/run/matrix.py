@@ -30,6 +30,38 @@ from repro.run.spec import RunSpec
 from repro.run.session import build_session
 
 
+def _is_serve_path(path: Path) -> bool:
+    import json
+
+    from repro.serve.spec import is_serve_spec_dict
+    try:
+        return is_serve_spec_dict(json.loads(path.read_text()))
+    except (OSError, ValueError):
+        return False
+
+
+def _smoke_serve(path: Path, rec: dict) -> None:
+    """Drive a ServeSpec through build_server + a tiny request burst —
+    the serving analogue of build_session().lower()."""
+    import numpy as np
+
+    from repro.serve import ServeSpec, build_server
+
+    spec = ServeSpec.load(path)
+    rec["hash"] = spec.content_hash()
+    rec["describe"] = spec.describe()
+    server = build_server(spec)
+    n = server.graph.num_nodes
+    targets = [[int(v)] for v in
+               np.random.default_rng(0).integers(0, n, size=4)]
+    server.serve_batch(targets)
+    rec["served"] = server.requests_served
+    rec["compiled_programs"] = server.compiled_programs()
+    if server.fanouts is None and not server.check_parity(targets[0]):
+        raise AssertionError("full-fanout served logits diverged from "
+                             "the full-batch forward")
+
+
 def run_matrix(spec_dir: Path, compile_step: bool = False,
                verbose: bool = True) -> list:
     paths = sorted(spec_dir.glob("*.json"))
@@ -40,20 +72,24 @@ def run_matrix(spec_dir: Path, compile_step: bool = False,
         t0 = time.time()
         rec = {"spec": path.name, "status": "ok"}
         try:
-            spec = RunSpec.load(path)
-            rec["hash"] = spec.content_hash()
-            rec["describe"] = spec.describe()
-            session = build_session(spec)
-            if spec.exec.mode == "multiproc":
-                # No lowered module to inspect: the dry-run equivalent is
-                # the shared-store + mailbox accounting (no processes).
-                rec["store"] = session.trainer.dry_plan()
+            if _is_serve_path(path):
+                _smoke_serve(path, rec)
             else:
-                lowered = session.lower()
-                rec["lowered_bytes"] = len(lowered.as_text())
-                if compile_step:
-                    lowered.compile()
-                    rec["compiled"] = True
+                spec = RunSpec.load(path)
+                rec["hash"] = spec.content_hash()
+                rec["describe"] = spec.describe()
+                session = build_session(spec)
+                if spec.exec.mode == "multiproc":
+                    # No lowered module to inspect: the dry-run equivalent
+                    # is the shared-store + mailbox accounting (no
+                    # processes).
+                    rec["store"] = session.trainer.dry_plan()
+                else:
+                    lowered = session.lower()
+                    rec["lowered_bytes"] = len(lowered.as_text())
+                    if compile_step:
+                        lowered.compile()
+                        rec["compiled"] = True
         except Exception as e:
             rec["status"] = "error"
             rec["error"] = f"{type(e).__name__}: {e}"
@@ -90,9 +126,12 @@ def main() -> None:
     args = ap.parse_args()
     spec_dir = Path(args.spec_dir)
     if args.list:
+        from repro.serve import ServeSpec
         for path in sorted(spec_dir.glob("*.json")):
-            spec = RunSpec.load(path)
-            print(f"{path.name:28s} {spec.describe()}")
+            if _is_serve_path(path):
+                print(f"{path.name:28s} {ServeSpec.load(path).describe()}")
+            else:
+                print(f"{path.name:28s} {RunSpec.load(path).describe()}")
         return
     if args.audit:
         from repro.analysis.audit import main as audit_main

@@ -240,7 +240,11 @@ class Session:
                     raise RuntimeError(
                         f"resume requested but no valid checkpoint under "
                         f"{ckpt_dir}") from err
-            save = lambda: tr.save_train_state(mgr)
+            # Stamp provenance so a serving deployment can refuse a
+            # checkpoint trained on a different graph (serve/server.py).
+            meta = {"graph_hash": self.spec.graph.content_hash(),
+                    "spec_hash": self.spec.content_hash()}
+            save = lambda: tr.save_train_state(mgr, meta=meta)
 
         history = []
         while tr.epoch < n:

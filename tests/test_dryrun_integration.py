@@ -18,12 +18,12 @@ def test_dryrun_single_combo_compiles(tmp_path):
     env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
-         "--arch", "whisper-small", "--shape", "decode_32k"],
+         "--arch", "whisper-small", "--shape", "decode_32k",
+         "--out", str(tmp_path)],
         env=env, capture_output=True, text=True, timeout=560, cwd=ROOT)
     assert proc.returncode == 0, proc.stderr[-2000:]
     rec = json.loads(
-        (ROOT / "experiments/dryrun/whisper-small__decode_32k__16x16.json")
-        .read_text())
+        (tmp_path / "whisper-small__decode_32k__16x16.json").read_text())
     assert rec["status"] == "ok"
     assert rec["memory"]["temp_size_in_bytes"] > 0
     assert rec["hlo_analysis"]["dot_flops"] > 0

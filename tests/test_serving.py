@@ -1,0 +1,290 @@
+"""Serving subsystem: ego-net exactness, packing, staleness, retrace,
+checkpoint restore. (ISSUE 10 tentpole coverage.)"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.graph.structure import (block_diag_csrs, bucketed_ell_from_csr,
+                                   coo_to_csr, stack_bucketed_ells)
+from repro.kernels.seg_aggregate import bucketed_aggregate, device_bucketed
+from repro.run.session import build_session
+from repro.run.spec import SpecError
+from repro.serve import (FeatureCache, ServeError, ServeSpec, build_server,
+                         extract_ego)
+
+
+def _serve_spec(**over) -> ServeSpec:
+    spec = ServeSpec.from_json(json.dumps({
+        "run": {
+            "graph": {"source": "sbm", "nodes": 128, "classes": 4,
+                      "feat_dim": 8, "avg_degree": 6, "norm": "mean",
+                      "seed": 3},
+            "partition": {"nparts": 4},
+            "model": {"model": "sage", "hidden_dim": 16, "num_layers": 2,
+                      "gat_heads": 4},
+            "exec": {"mode": "vmap", "epochs": 2},
+        },
+        "serve": {"batch_size": 4, "min_nodes": 32},
+    }))
+    return spec.with_overrides([f"{k}={v}" for k, v in over.items()])
+
+
+# -- spec ------------------------------------------------------------------
+
+
+def test_spec_roundtrip_hash_overrides():
+    spec = _serve_spec()
+    again = ServeSpec.from_json(spec.to_json())
+    assert again == spec
+    assert spec.content_hash().startswith("sv-")
+    assert spec.content_hash() == again.content_hash()
+    # serve.* overrides land on ServeConfig; run keys pass through.
+    tweaked = spec.with_overrides(["serve.batch_size=16", "exec.seed=7"])
+    assert tweaked.serve.batch_size == 16
+    assert tweaked.run.exec.seed == 7
+    assert tweaked.content_hash() != spec.content_hash()
+    # Run assignments apply as one batch: flattening a hierarchical spec
+    # (groups=0 + clearing the inter-wire knobs) is legal in either order.
+    hier = spec.with_overrides(["partition.groups=2",
+                                "schedule.inter_bits=2"])
+    flat = hier.with_overrides(["partition.groups=0",
+                                "schedule.inter_bits=null"])
+    assert flat.run.partition.groups == 0
+    assert flat.run.schedule.inter_bits is None
+    with pytest.raises(SpecError):
+        spec.with_overrides(["serve.nonsense=1"])
+    with pytest.raises(SpecError):
+        ServeSpec.from_json('{"graph": {}}')  # plain RunSpec-shaped file
+    with pytest.raises(SpecError):
+        _serve_spec(**{"serve.fanouts": "banana"})
+
+
+# -- ego extraction --------------------------------------------------------
+
+
+def test_extract_ego_structure():
+    # Path graph 0 <- 1 <- 2 <- 3 (edges src -> dst): in-neighbour of
+    # node d is d+1.
+    csr = coo_to_csr(np.array([1, 2, 3]), np.array([0, 1, 2]), None, 4, 4)
+    ego = extract_ego(csr, [0], num_hops=2)
+    assert ego.nodes.tolist() == [0, 1, 2]
+    assert ego.num_targets == 1
+    assert ego.num_expanded == 2          # 0 and 1 expanded; 2 is the rim
+    deg = ego.csr.row_degrees()
+    assert deg.tolist() == [1, 1, 0]      # rim row empty
+    with pytest.raises(ValueError):
+        extract_ego(csr, [], 1)
+    with pytest.raises(ValueError):
+        extract_ego(csr, [0, 0], 1)
+    with pytest.raises(ValueError):
+        extract_ego(csr, [99], 1)
+
+
+def test_extract_ego_fanout_caps():
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 64, 512).astype(np.int32)
+    dst = rng.integers(0, 64, 512).astype(np.int32)
+    csr = coo_to_csr(src, dst, None, 64, 64)
+    ego = extract_ego(csr, [5], num_hops=2, fanouts=[3, 2],
+                      rng=np.random.default_rng(1))
+    deg = ego.csr.row_degrees()
+    assert deg[0] <= 3
+    assert all(d <= 3 for d in deg[:ego.num_expanded])
+    # Sampled neighbour lists preserve relative order (subsequence of the
+    # full row), keeping degree-bucket semantics deterministic.
+    full = extract_ego(csr, [5], num_hops=2)
+    lo, hi = ego.csr.indptr[0], ego.csr.indptr[1]
+    sampled = [int(ego.nodes[i]) for i in ego.csr.indices[lo:hi]]
+    flo, fhi = full.csr.indptr[0], full.csr.indptr[1]
+    row = [int(full.nodes[i]) for i in full.csr.indices[flo:fhi]]
+    it = iter(row)
+    assert all(v in it for v in sampled)
+
+
+# -- block-diagonal packing ------------------------------------------------
+
+
+def test_block_diag_packing_matches_per_graph():
+    rng = np.random.default_rng(2)
+    csrs, xs = [], []
+    for n in (5, 9, 17):
+        m = 3 * n
+        csr = coo_to_csr(rng.integers(0, n, m), rng.integers(0, n, m),
+                         rng.random(m).astype(np.float32), n, n)
+        csrs.append(csr)
+        xs.append(rng.normal(size=(n, 8)).astype(np.float32))
+    merged = block_diag_csrs(csrs)
+    assert merged.num_rows == sum(c.num_rows for c in csrs)
+    assert merged.nnz == sum(c.nnz for c in csrs)
+
+    def agg(csr, x):
+        ell = device_bucketed(
+            stack_bucketed_ells([bucketed_ell_from_csr(csr)]), squeeze=True)
+        return np.asarray(bucketed_aggregate(x, ell, ell, csr.num_rows))
+
+    packed = agg(merged, np.concatenate(xs))
+    per = np.concatenate([agg(c, x) for c, x in zip(csrs, xs)])
+    # Bit-identical, not just close: packing shifts ids without reordering
+    # any row's neighbour slots, and a row's bucket K depends only on its
+    # degree.
+    assert np.array_equal(packed, per)
+
+
+# -- serving parity (the tentpole guarantee) -------------------------------
+
+
+@pytest.mark.parametrize("hier", [False, True])
+def test_served_logits_bit_identical_to_full_batch(hier):
+    over = {"partition.groups": 2} if hier else {}
+    srv = build_server(_serve_spec(**over))
+    ref = srv.full_batch_logits()
+    # Singles, multi-target, and a packed mixed batch.
+    for targets in ([7], [3, 11, 60], [127]):
+        out = srv.serve(targets)
+        assert np.array_equal(out, ref[np.asarray(targets)]), targets
+    reqs = [[1], [2, 3], [40, 41, 42], [88]]
+    outs = srv.serve_batch(reqs)
+    for t, o in zip(reqs, outs):
+        assert np.array_equal(o, ref[np.asarray(t)]), t
+
+
+def test_served_parity_gat():
+    srv = build_server(_serve_spec(**{"model.model": "gat"}))
+    ref = srv.full_batch_logits()
+    out = srv.serve([5, 23])
+    assert np.array_equal(out, ref[np.asarray([5, 23])])
+
+
+# -- staleness -------------------------------------------------------------
+
+
+def test_feature_cache_staleness_bound():
+    rng = np.random.default_rng(4)
+    store = rng.normal(size=(32, 4)).astype(np.float32)
+    part = np.array([0] * 16 + [1] * 16)
+    cache = FeatureCache(store, part, home=0, max_staleness=2)
+    for step in range(30):
+        ids = rng.integers(0, 32, size=6)
+        got = cache.gather(ids)
+        for gid, row in zip(ids, got):
+            if part[gid] == 0:
+                assert np.array_equal(row, store[gid])  # local = live
+        cache.update_features(rng.integers(0, 32, size=3),
+                              rng.normal(size=(3, 4)).astype(np.float32))
+    assert cache.max_age_served <= 2
+    assert cache.hits > 0 and cache.misses > 0
+
+    strict = FeatureCache(store, part, home=0, max_staleness=0)
+    r = strict.gather([20])[0]
+    assert np.array_equal(r, store[20])
+    strict.update_features([20], np.ones((1, 4), np.float32))
+    assert np.array_equal(strict.gather([20])[0], store[20])  # refreshed
+    assert strict.max_age_served == 0
+
+
+def test_cache_refresh_sweep_and_clear():
+    store = np.zeros((8, 2), np.float32)
+    part = np.array([0, 0, 1, 1, 1, 1, 1, 1])
+    cache = FeatureCache(store, part, home=0, max_staleness=1)
+    cache.gather([2, 3, 4])
+    store[:] = 7.0
+    cache.tick()
+    cache.tick()                      # cached rows now age 2 > bound
+    assert cache.refresh() == 3       # sweep refetches all three
+    assert np.array_equal(cache.gather([2])[0], store[2])
+    cache.clear()
+    before = cache.misses
+    cache.gather([2])
+    assert cache.misses == before + 1
+
+
+# -- retrace guard ---------------------------------------------------------
+
+
+def test_mixed_batches_do_not_retrace():
+    srv = build_server(_serve_spec())
+    rng = np.random.default_rng(5)
+    n = srv.graph.num_nodes
+    for m in range(12):               # 12 batches of varying composition
+        k = 1 + (m % srv.serve_cfg.batch_size)
+        reqs = [[int(v)] for v in rng.choice(n, size=k, replace=False)]
+        srv.serve_batch(reqs)
+    assert srv.batches_dispatched >= 12
+    # Compiled programs bounded by shape classes (<= ladder size), not by
+    # the number of distinct batch compositions.
+    assert srv.compiled_programs() <= len(srv.ladder.ladder)
+    assert srv.compiled_programs() < srv.batches_dispatched
+
+
+# -- checkpoint restore ----------------------------------------------------
+
+
+def _train_ckpt(spec: ServeSpec, ckpt_dir, epochs=2):
+    session = build_session(spec.run)
+    try:
+        session.fit(epochs=epochs, log_every=0, ckpt_dir=str(ckpt_dir))
+    finally:
+        session.close()
+
+
+def test_serve_from_checkpoint_restores_params(tmp_path):
+    spec = _serve_spec()
+    _train_ckpt(spec, tmp_path)
+    trained = build_server(spec.with_overrides([f"serve.ckpt={tmp_path}"]))
+    fresh = build_server(spec)
+    # Restored parameters are the trained ones, not the init.
+    w_t = np.asarray(trained.params["layers"][0]["w_neigh"])
+    w_f = np.asarray(fresh.params["layers"][0]["w_neigh"])
+    assert not np.array_equal(w_t, w_f)
+    # And the parity guarantee holds for the restored model too.
+    ref = trained.full_batch_logits()
+    out = trained.serve([9, 77])
+    assert np.array_equal(out, ref[np.asarray([9, 77])])
+
+
+def test_serve_ckpt_corrupt_falls_back(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    spec = _serve_spec()
+    _train_ckpt(spec, tmp_path)
+    mgr = CheckpointManager(tmp_path)
+    steps = mgr.steps()
+    assert len(steps) >= 2
+    # Mutate the newest snapshot's arrays: load_latest must fall back.
+    newest = mgr.path_for(steps[-1]).with_suffix(".npz")
+    blob = bytearray(newest.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    newest.write_bytes(bytes(blob))
+    srv = build_server(spec.with_overrides([f"serve.ckpt={tmp_path}"]))
+    assert srv.requests_served == 0   # built fine from the previous step
+
+    # Every snapshot corrupt -> clean ServeError.
+    for s in mgr.steps():
+        p = mgr.path_for(s).with_suffix(".npz")
+        p.write_bytes(b"not a checkpoint")
+    with pytest.raises(ServeError, match="no loadable checkpoint"):
+        build_server(spec.with_overrides([f"serve.ckpt={tmp_path}"]))
+
+
+def test_serve_ckpt_graph_mismatch_errors(tmp_path):
+    spec = _serve_spec()
+    _train_ckpt(spec, tmp_path)
+    other = spec.with_overrides(["graph.nodes=160",
+                                 f"serve.ckpt={tmp_path}"])
+    with pytest.raises(ServeError, match="graph"):
+        build_server(other)
+
+
+# -- matrix integration ----------------------------------------------------
+
+
+def test_matrix_smokes_serve_spec(tmp_path):
+    from repro.run.matrix import run_matrix
+    (tmp_path / "s.json").write_text(
+        _serve_spec().to_json() + "\n")
+    results = run_matrix(tmp_path, verbose=False)
+    assert len(results) == 1
+    assert results[0]["status"] == "ok", results[0].get("error")
+    assert results[0]["hash"].startswith("sv-")
+    assert results[0]["served"] == 4
